@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: the paper's test tree, timing, CSV output."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.paper_io import PAPER_IO
+from repro.data.events import make_events
+
+__all__ = ["paper_tree_bytes", "time_fn", "emit", "EVENTS"]
+
+EVENTS = None
+
+
+def paper_tree_bytes() -> dict[str, bytes]:
+    """The paper's §2 artificial tree, serialized column-wise (Fig. 1)."""
+    global EVENTS
+    if EVENTS is None:
+        EVENTS = make_events(PAPER_IO.n_events, PAPER_IO.seed)
+    return {name: np.ascontiguousarray(arr).tobytes()
+            for name, arr in EVENTS.items()}
+
+
+def time_fn(fn, *args, repeat: int = 3, min_time: float = 0.05) -> float:
+    """Best-of-repeat wall seconds; auto-loops tiny calls."""
+    best = float("inf")
+    for _ in range(repeat):
+        n = 0
+        t0 = time.perf_counter()
+        while True:
+            fn(*args)
+            n += 1
+            dt = time.perf_counter() - t0
+            if dt >= min_time:
+                break
+        best = min(best, dt / n)
+    return best
+
+
+def emit(rows: list[dict], path: str | None = None) -> None:
+    """Print rows as CSV (and optionally save)."""
+    if not rows:
+        return
+    cols = list(rows[0])
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(str(r.get(c, "")) for c in cols))
+    text = "\n".join(lines)
+    print(text)
+    if path:
+        import os
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text + "\n")

@@ -1,0 +1,44 @@
+"""Figure 2: compression ratio vs compression speed, per (algo, level).
+
+The paper's test: the artificial 2000-event tree, every ROOT codec at
+levels 1/6/9 (level 0 = off shown as the 1.0x reference).  x = overall
+ratio, y = compression MB/s.
+"""
+
+from __future__ import annotations
+
+from repro.core import CODECS, CompressionConfig, compress
+from repro.configs.paper_io import PAPER_IO
+
+from .common import emit, paper_tree_bytes, time_fn
+
+
+def run(out_csv: str | None = None) -> list[dict]:
+    tree = paper_tree_bytes()
+    blob = b"".join(tree.values())
+    total = len(blob)
+    rows = []
+    for algo in PAPER_IO.codecs:
+        if algo not in CODECS:
+            continue
+        for level in PAPER_IO.levels:
+            cfg = CompressionConfig(algo=algo, level=level)
+            # per-branch compression, like ROOT baskets
+            comp = sum(len(compress(b, cfg)) for b in tree.values())
+            slow = algo in ("repro-deflate", "repro-deflate-ref", "repro-zstd", "lzma")
+            reps = 1 if slow else 3
+            if slow and level > 6:
+                level_cfg = cfg  # still measured, just once
+            dt = time_fn(lambda: [compress(b, cfg) for b in tree.values()],
+                         repeat=reps, min_time=0.01)
+            rows.append({
+                "bench": "fig2", "algo": algo, "level": level,
+                "ratio": round(total / comp, 3),
+                "comp_MBps": round(total / dt / 1e6, 2),
+            })
+    emit(rows, out_csv)
+    return rows
+
+
+if __name__ == "__main__":
+    run("artifacts/bench/fig2.csv")

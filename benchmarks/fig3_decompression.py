@@ -1,0 +1,37 @@
+"""Figure 3: decompression speed by algorithm and input-file level.
+
+The paper's observation: decompression speed is primarily a function of
+the ALGORITHM, not the level the file was written at (levels 0/1/6/9).
+"""
+
+from __future__ import annotations
+
+from repro.core import CODECS, CompressionConfig, compress, decompress
+from repro.configs.paper_io import PAPER_IO
+
+from .common import emit, paper_tree_bytes, time_fn
+
+
+def run(out_csv: str | None = None) -> list[dict]:
+    tree = paper_tree_bytes()
+    total = sum(len(b) for b in tree.values())
+    rows = []
+    for algo in PAPER_IO.codecs:
+        if algo not in CODECS:
+            continue
+        for level in (0,) + PAPER_IO.levels:
+            cfg = CompressionConfig(algo=algo, level=level)
+            comp = {n: compress(b, cfg) for n, b in tree.items()}
+            dt = time_fn(lambda: [decompress(c, len(tree[n]), cfg)
+                                  for n, c in comp.items()],
+                         repeat=3, min_time=0.02)
+            rows.append({
+                "bench": "fig3", "algo": algo, "level": level,
+                "decomp_MBps": round(total / dt / 1e6, 2),
+            })
+    emit(rows, out_csv)
+    return rows
+
+
+if __name__ == "__main__":
+    run("artifacts/bench/fig3.csv")

@@ -1,0 +1,64 @@
+"""Figures 4-5: the CF-ZLIB mechanisms, measured tier by tier.
+
+Fig 4 (compression speed, ref-zlib vs CF patch set): reproduced two ways —
+ (a) checksum tiers: adler32 naive loop vs vectorized (_mm_sad_epu8
+     analogue) vs C library; crc32 bitwise vs table vs slice-by-8 vs C
+     (Fig 5's "with/without hardware crc32" contrast);
+ (b) match-hashing: our from-scratch deflate with reference TRIPLET
+     hashing vs CF QUADRUPLET hashing at the paper's fast levels (1-5).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import checksum as cs
+from repro.core import repro_deflate as rdef
+
+from .common import emit, paper_tree_bytes, time_fn
+
+
+def run(out_csv: str | None = None) -> list[dict]:
+    rng = np.random.default_rng(3)
+    data = bytes(rng.integers(0, 256, 1 << 20, dtype=np.uint8))   # 1 MiB
+    n = len(data)
+    rows = []
+
+    adler_tiers = [
+        ("adler32_naive", cs.adler32_naive, data[: n // 64], n // 64),
+        ("adler32_vector", cs.adler32_vector, data, n),
+        ("adler32_c", cs.adler32_hw, data, n),
+    ]
+    for name, fn, payload, nb in adler_tiers:
+        dt = time_fn(fn, payload, repeat=3, min_time=0.02)
+        rows.append({"bench": "fig4_checksum", "tier": name,
+                     "MBps": round(nb / dt / 1e6, 2)})
+
+    crc_tiers = [
+        ("crc32_bitwise", cs.crc32_naive, data[: n // 256], n // 256),
+        ("crc32_table", cs.crc32_table, data[: n // 64], n // 64),
+        ("crc32_slice8", cs.crc32_slice8, data[: n // 4], n // 4),
+        ("crc32_c", cs.crc32_hw, data, n),
+    ]
+    for name, fn, payload, nb in crc_tiers:
+        dt = time_fn(fn, payload, repeat=3, min_time=0.02)
+        rows.append({"bench": "fig5_crc", "tier": name,
+                     "MBps": round(nb / dt / 1e6, 2)})
+
+    # (b) triplet vs quadruplet hashing in our deflate, fast levels
+    tree = paper_tree_bytes()
+    sample = b"".join(list(tree.values())[:6])[: 1 << 18]
+    for level in (1, 3, 5):
+        for mode in ("ref", "cf"):
+            dt = time_fn(lambda: rdef.compress(sample, level=level, mode=mode),
+                         repeat=1, min_time=0.0)
+            out = rdef.compress(sample, level=level, mode=mode)
+            rows.append({"bench": "fig4_hashing", "tier": f"{mode}-l{level}",
+                         "MBps": round(len(sample) / dt / 1e6, 3),
+                         "ratio": round(len(sample) / len(out), 3)})
+    emit(rows, out_csv)
+    return rows
+
+
+if __name__ == "__main__":
+    run("artifacts/bench/fig45.csv")

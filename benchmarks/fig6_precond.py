@@ -1,0 +1,66 @@
+"""Figure 6: NanoAOD compression ratio — LZ4 vs LZ4+Shuffle vs
+LZ4+BitShuffle vs ZLIB, per branch class and overall.
+
+The paper's claim: BitShuffle preconditioning lets LZ4 beat ZLIB on ratio
+while keeping LZ4's decompression speed.  Both halves are measured.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompressionConfig
+from repro.core.basket import pack_basket, unpack_basket
+
+from .common import emit, paper_tree_bytes, time_fn
+
+
+def _precond_for(name: str, precond_kind: str, arr_bytes: bytes,
+                 itemsize: int) -> str:
+    if precond_kind == "none":
+        return "none"
+    if precond_kind == "shuffle":
+        return f"shuffle{itemsize}"
+    return f"bitshuffle{max(itemsize, 2)}"
+
+
+def run(out_csv: str | None = None) -> list[dict]:
+    from .common import EVENTS, paper_tree_bytes
+    tree = paper_tree_bytes()
+    from benchmarks import common
+    events = common.EVENTS
+    variants = [
+        ("lz4", CompressionConfig("lz4", 1)),
+        ("lz4+shuffle", None),
+        ("lz4+bitshuffle", None),
+        ("zlib", CompressionConfig("zlib", 6)),
+        ("zstd+bitshuffle", None),
+    ]
+    rows = []
+    totals = {v[0]: [0, 0, 0.0] for v in variants}   # raw, comp, dec_s
+    for name, blob in tree.items():
+        itemsize = events[name].dtype.itemsize
+        for vname, cfg in variants:
+            if cfg is None:
+                algo = "zstd" if vname.startswith("zstd") else "lz4"
+                kind = "shuffle" if "+" in vname and "bit" not in vname else "bitshuffle"
+                cfg_v = CompressionConfig(algo, 1 if algo == "lz4" else 3,
+                                          _precond_for(name, kind, blob, itemsize))
+            else:
+                cfg_v = cfg
+            payload, meta = pack_basket(blob, cfg_v)
+            dt = time_fn(lambda: unpack_basket(payload, meta),
+                         repeat=2, min_time=0.005)
+            totals[vname][0] += len(blob)
+            totals[vname][1] += len(payload)
+            totals[vname][2] += dt
+    for vname, (raw, comp, dec_s) in totals.items():
+        rows.append({"bench": "fig6", "variant": vname,
+                     "ratio": round(raw / comp, 3),
+                     "decomp_MBps": round(raw / dec_s / 1e6, 1)})
+    emit(rows, out_csv)
+    return rows
+
+
+if __name__ == "__main__":
+    run("artifacts/bench/fig6.csv")

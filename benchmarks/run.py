@@ -1,0 +1,51 @@
+"""Benchmark harness entry point: one module per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig6,...]
+
+Outputs CSV per benchmark (stdout + artifacts/bench/*.csv).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig2_survey, fig3_decompression, fig45_cfzlib, fig6_precond,
+               fig_dict, pipeline_tput, roofline)
+
+BENCHES = {
+    "fig2": fig2_survey,
+    "fig3": fig3_decompression,
+    "fig45": fig45_cfzlib,
+    "fig6": fig6_precond,
+    "fig_dict": fig_dict,
+    "pipeline": pipeline_tput,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+    names = [n for n in args.only.split(",") if n] or list(BENCHES)
+    rc = 0
+    for name in names:
+        mod = BENCHES[name]
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.monotonic()
+        try:
+            mod.run(f"artifacts/bench/{name}.csv")
+        except Exception as e:  # keep the harness going; report at the end
+            print(f"BENCH {name} FAILED: {e!r}")
+            import traceback
+            traceback.print_exc()
+            rc = 1
+        print(f"===== {name} done in {time.monotonic()-t0:.1f}s =====")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,37 @@
+"""Train a ~100M-param LM for a few hundred steps, end to end:
+compressed data pipeline -> sharded-capable train step -> compressed
+async checkpoints -> resume.
+
+This drives the same launcher as production (`repro.launch.train`) with a
+custom mid-size config (bigger than the smoke `reduced()` configs, small
+enough for CPU).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main as train_main  # noqa: E402
+
+
+def run(steps: int = 300, workdir: str = "/tmp/repro_train_lm"):
+    # rwkv6 reduced is the fastest per-step family on CPU; the driver's
+    # --reduced flag shrinks structure, keeping every subsystem in play.
+    return train_main([
+        "--arch", "rwkv6-1.6b", "--reduced",
+        "--steps", str(steps),
+        "--batch", "8", "--seq-len", "128",
+        "--ckpt-every", "100", "--log-every", "20",
+        "--workdir", workdir,
+    ])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--workdir", default="/tmp/repro_train_lm")
+    a = ap.parse_args()
+    raise SystemExit(run(a.steps, a.workdir))

@@ -1,0 +1,6 @@
+"""repro.checkpoint — basket-format checkpoints with per-tensor codec
+policy, async+atomic writes, retention, and elastic re-shard on restore."""
+
+from .manager import CheckpointManager, save_pytree, load_pytree
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]

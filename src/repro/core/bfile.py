@@ -1,0 +1,203 @@
+"""BasketFile: the on-disk container (the "ROOT file" of this framework).
+
+Layout::
+
+    [8B magic "RBKTv001"][baskets...][TOC json][8B TOC length][8B magic]
+
+* The TOC (table of contents) maps branch name -> dtype/shape/compression
+  config/dictionary + the (offset, length, meta) of every basket — ROOT's
+  directory/streamer-info analogue, minus C++ streamers.
+* Baskets are written streaming; the TOC goes last, and the file is written
+  to a temp path then atomically renamed — a crash mid-write can never
+  produce a file with a valid trailer (fault-tolerance invariant used by
+  the checkpointer).
+* Dictionaries (paper §2.3 "placement within the ROOT file" open question):
+  stored once in the TOC region per branch, not per basket — amortizing
+  dictionary bytes across baskets, which is the sizing/placement policy the
+  paper asks for (evaluated in benchmarks/fig_dict.py).
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+import os
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from .basket import BasketMeta, join_baskets, pack_basket, split_array, unpack_basket
+from .codec import CompressionConfig
+
+__all__ = ["BasketWriter", "BasketFile", "write_arrays", "read_arrays"]
+
+_MAGIC = b"RBKTv001"
+
+
+class BasketWriter:
+    """Streaming writer with atomic commit."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._tmp = self.path + ".tmp"
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+        self._f = open(self._tmp, "wb")
+        self._f.write(_MAGIC)
+        self._branches: dict[str, dict] = {}
+        self._closed = False
+
+    def write_branch(self, name: str, arr: np.ndarray,
+                     cfg: Optional[CompressionConfig] = None,
+                     target_basket_bytes: int = 1 << 20) -> dict:
+        """Serialize an array column-wise into compressed baskets."""
+        if name in self._branches:
+            raise ValueError(f"branch {name!r} already written")
+        cfg = cfg or CompressionConfig()
+        arr = np.asarray(arr)
+        baskets = []
+        for start, count, raw in split_array(arr, target_basket_bytes):
+            payload, meta = pack_basket(raw, cfg, entry_start=start, entry_count=count)
+            off = self._f.tell()
+            self._f.write(payload)
+            baskets.append({"offset": off, "meta": meta.to_json()})
+        entry = {
+            "dtype": arr.dtype.str,
+            "shape": list(arr.shape),
+            "config": {"algo": cfg.algo, "level": cfg.level, "precond": cfg.precond},
+            "dictionary": base64.b64encode(cfg.dictionary).decode() if cfg.dictionary else None,
+            "baskets": baskets,
+        }
+        self._branches[name] = entry
+        return entry
+
+    def write_blob(self, name: str, raw: bytes, cfg: Optional[CompressionConfig] = None) -> None:
+        """Opaque byte branch (metadata blobs, tokenizer state, ...)."""
+        self.write_branch(name, np.frombuffer(raw, dtype=np.uint8), cfg)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        toc = json.dumps({"branches": self._branches}).encode()
+        self._f.write(toc)
+        self._f.write(len(toc).to_bytes(8, "little"))
+        self._f.write(_MAGIC)
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+        os.replace(self._tmp, self.path)  # atomic commit
+        self._closed = True
+
+    def abort(self) -> None:
+        if not self._closed:
+            self._f.close()
+            if os.path.exists(self._tmp):
+                os.remove(self._tmp)
+            self._closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, *a):
+        if exc_type is None:
+            self.close()
+        else:
+            self.abort()
+
+
+class BasketFile:
+    """Reader with optional thread-pool parallel decompression."""
+
+    def __init__(self, path: str, verify: bool = True):
+        self.path = str(path)
+        self.verify = verify
+        with open(self.path, "rb") as f:
+            head = f.read(8)
+            if head != _MAGIC:
+                raise ValueError(f"{path}: not a BasketFile (bad magic)")
+            f.seek(-16, os.SEEK_END)
+            toc_len = int.from_bytes(f.read(8), "little")
+            if f.read(8) != _MAGIC:
+                raise ValueError(f"{path}: truncated (bad trailer) — incomplete write?")
+            f.seek(-16 - toc_len, os.SEEK_END)
+            self._toc = json.loads(f.read(toc_len))
+        self.branches = self._toc["branches"]
+
+    def branch_names(self) -> list[str]:
+        return list(self.branches)
+
+    def _dictionary(self, entry: dict) -> Optional[bytes]:
+        d = entry.get("dictionary")
+        return base64.b64decode(d) if d else None
+
+    def read_basket_raw(self, name: str, i: int) -> bytes:
+        entry = self.branches[name]
+        b = entry["baskets"][i]
+        meta = BasketMeta.from_json(b["meta"])
+        with open(self.path, "rb") as f:
+            f.seek(b["offset"])
+            payload = f.read(meta.comp_len)
+        return unpack_basket(payload, meta, self._dictionary(entry), verify=self.verify)
+
+    def read_branch(self, name: str, workers: int = 0) -> np.ndarray:
+        """Read + decompress a branch; ``workers>0`` = parallel decompression
+        (the paper's simultaneous-read-and-decompress)."""
+        entry = self.branches[name]
+        n = len(entry["baskets"])
+        if workers and n > 1:
+            with ThreadPoolExecutor(max_workers=workers) as ex:
+                chunks = list(ex.map(lambda i: self.read_basket_raw(name, i), range(n)))
+        else:
+            chunks = [self.read_basket_raw(name, i) for i in range(n)]
+        return join_baskets(chunks, entry["dtype"], tuple(entry["shape"]))
+
+    def read_entries(self, name: str, start: int, stop: int) -> np.ndarray:
+        """Row-range read touching only the covering baskets (seekability)."""
+        entry = self.branches[name]
+        shape = tuple(entry["shape"])
+        chunks, first_entry = [], None
+        for i, b in enumerate(entry["baskets"]):
+            m = BasketMeta.from_json(b["meta"])
+            if m.entry_start + m.entry_count <= start or m.entry_start >= stop:
+                continue
+            if first_entry is None:
+                first_entry = m.entry_start
+            chunks.append(self.read_basket_raw(name, i))
+        if not chunks:
+            return np.zeros((0,) + shape[1:], dtype=np.dtype(entry["dtype"]))
+        buf = b"".join(chunks)
+        rows = len(buf) // (np.dtype(entry["dtype"]).itemsize * int(np.prod(shape[1:], dtype=np.int64)) or 1)
+        arr = np.frombuffer(buf, dtype=np.dtype(entry["dtype"])).reshape((rows,) + shape[1:])
+        return arr[start - first_entry: stop - first_entry].copy()
+
+    def compressed_bytes(self, name: Optional[str] = None) -> int:
+        names = [name] if name else self.branch_names()
+        return sum(b["meta"]["comp_len"] for n in names for b in self.branches[n]["baskets"])
+
+    def raw_bytes(self, name: Optional[str] = None) -> int:
+        names = [name] if name else self.branch_names()
+        return sum(b["meta"]["orig_len"] for n in names for b in self.branches[n]["baskets"])
+
+    def compression_ratio(self, name: Optional[str] = None) -> float:
+        c = self.compressed_bytes(name)
+        return self.raw_bytes(name) / c if c else float("inf")
+
+
+# ---------------------------------------------------------------------------
+# pytree-of-arrays convenience (used by the checkpointer)
+# ---------------------------------------------------------------------------
+
+def write_arrays(path: str, arrays: dict[str, np.ndarray],
+                 cfg_for: Optional[callable] = None,
+                 target_basket_bytes: int = 1 << 20) -> None:
+    """Write a flat dict of named arrays; ``cfg_for(name, arr)`` picks the
+    per-branch CompressionConfig (the codec policy hook)."""
+    with BasketWriter(path) as w:
+        for name, arr in arrays.items():
+            cfg = cfg_for(name, np.asarray(arr)) if cfg_for else None
+            w.write_branch(name, arr, cfg, target_basket_bytes)
+
+
+def read_arrays(path: str, workers: int = 0) -> dict[str, np.ndarray]:
+    f = BasketFile(path)
+    return {name: f.read_branch(name, workers=workers) for name in f.branch_names()}

@@ -1,0 +1,176 @@
+"""Canonical Huffman coder over byte symbols.
+
+The entropy stage for ``repro_deflate`` (and its large-window "repro-zstd"
+variant).  ZLIB's second pass is Huffman coding (paper §2); this module is a
+self-contained, numpy-vectorized encoder with a table-driven decoder so the
+paper's "entropy stage" mechanism exists in our from-scratch codec rather
+than being inherited opaquely from libz.
+
+Wire format (little-endian bit order within bytes)::
+
+    [2B n_symbols_present][for each present symbol: 1B symbol, then packed
+     4-bit code lengths][4B n_encoded_symbols][packed bitstream]
+
+Code lengths are capped at 15 bits (deflate's own cap) via the standard
+length-limiting fix-up.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+__all__ = ["encode", "decode", "code_lengths", "canonical_codes"]
+
+_MAX_BITS = 15
+
+
+def code_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Huffman code lengths (capped at _MAX_BITS) for a 256-entry freq table."""
+    sym = np.nonzero(freqs)[0]
+    n = sym.size
+    lengths = np.zeros(256, dtype=np.uint8)
+    if n == 0:
+        return lengths
+    if n == 1:
+        lengths[sym[0]] = 1
+        return lengths
+    # heap of (freq, tiebreak, node); leaves are ints, internals are tuples
+    heap = [(int(freqs[s]), int(s), int(s)) for s in sym]
+    heapq.heapify(heap)
+    cnt = 256
+    while len(heap) > 1:
+        f1, _, n1 = heapq.heappop(heap)
+        f2, _, n2 = heapq.heappop(heap)
+        heapq.heappush(heap, (f1 + f2, cnt, (n1, n2)))
+        cnt += 1
+    # walk tree for depths
+    stack = [(heap[0][2], 0)]
+    while stack:
+        node, d = stack.pop()
+        if isinstance(node, tuple):
+            stack.append((node[0], d + 1))
+            stack.append((node[1], d + 1))
+        else:
+            lengths[node] = max(d, 1)
+    # length-limit to _MAX_BITS (Kraft fix-up: demote overlong, then re-pay)
+    if lengths.max() > _MAX_BITS:
+        lengths = np.minimum(lengths, _MAX_BITS)
+        # Kraft sum K = sum(2^-len) must be <= 1 in units of 2^-MAX_BITS;
+        # demote (lengthen) the rarest symbols until it holds.
+        unit = 1 << _MAX_BITS
+        k = int(np.sum(unit >> lengths[lengths > 0].astype(np.int64)))
+        if k > unit:
+            # demote symbols with the smallest freq first
+            order = np.argsort(freqs + (lengths == 0) * (1 << 62))
+            i = 0
+            while k > unit and i < order.size:
+                s = order[i]
+                while lengths[s] < _MAX_BITS and k > unit:
+                    k -= unit >> int(lengths[s])
+                    lengths[s] += 1
+                    k += unit >> int(lengths[s])
+                i += 1
+    return lengths
+
+
+def canonical_codes(lengths: np.ndarray) -> np.ndarray:
+    """Canonical code values (uint16) for given code lengths."""
+    codes = np.zeros(256, dtype=np.uint16)
+    code = 0
+    for bits in range(1, _MAX_BITS + 1):
+        for s in np.nonzero(lengths == bits)[0]:
+            codes[s] = code
+            code += 1
+        code <<= 1
+    return codes
+
+
+def _pack_bits(symbols: np.ndarray, codes: np.ndarray, lengths: np.ndarray) -> bytes:
+    """Vectorized bit-packing of per-symbol canonical codes (MSB-first)."""
+    lens = lengths[symbols].astype(np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return b""
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    bits = np.zeros(total, dtype=np.uint8)
+    cvals = codes[symbols].astype(np.uint32)
+    maxlen = int(lens.max())
+    for p in range(maxlen):              # <=15 iterations, each fully vectorized
+        sel = lens > p
+        if not sel.any():
+            break
+        shift = (lens[sel] - 1 - p).astype(np.uint32)
+        bits[starts[sel] + p] = (cvals[sel] >> shift) & 1
+    return np.packbits(bits).tobytes()
+
+
+def encode(data: bytes) -> bytes:
+    """Huffman-encode a byte string (self-describing header + bitstream)."""
+    arr = np.frombuffer(data, dtype=np.uint8)
+    out = bytearray()
+    if arr.size == 0:
+        return bytes([0, 0]) + (0).to_bytes(4, "little")
+    freqs = np.bincount(arr, minlength=256)
+    lengths = code_lengths(freqs)
+    codes = canonical_codes(lengths)
+    present = np.nonzero(lengths)[0]
+    out += int(present.size).to_bytes(2, "little")
+    out += present.astype(np.uint8).tobytes()
+    # 4-bit lengths, two per byte
+    ls = lengths[present]
+    if ls.size % 2:
+        ls = np.concatenate([ls, [0]])
+    out += ((ls[0::2].astype(np.uint8) << 4) | ls[1::2].astype(np.uint8)).tobytes()
+    out += int(arr.size).to_bytes(4, "little")
+    out += _pack_bits(arr, codes, lengths)
+    return bytes(out)
+
+
+def decode(blob: bytes) -> bytes:
+    """Invert :func:`encode` via a 2^maxbits lookup table."""
+    n_present = int.from_bytes(blob[:2], "little")
+    pos = 2
+    if n_present == 0:
+        return b""
+    present = np.frombuffer(blob[pos:pos + n_present], dtype=np.uint8)
+    pos += n_present
+    n_len_bytes = (n_present + 1) // 2
+    packed = np.frombuffer(blob[pos:pos + n_len_bytes], dtype=np.uint8)
+    pos += n_len_bytes
+    ls = np.zeros(n_len_bytes * 2, dtype=np.uint8)
+    ls[0::2] = packed >> 4
+    ls[1::2] = packed & 0xF
+    lengths = np.zeros(256, dtype=np.uint8)
+    lengths[present] = ls[:n_present]
+    n_syms = int.from_bytes(blob[pos:pos + 4], "little")
+    pos += 4
+    codes = canonical_codes(lengths)
+    maxbits = int(lengths.max())
+    # table: every maxbits-bit prefix -> (symbol, length)
+    tbl_sym = np.zeros(1 << maxbits, dtype=np.uint8)
+    tbl_len = np.zeros(1 << maxbits, dtype=np.uint8)
+    for s in np.nonzero(lengths)[0]:
+        L = int(lengths[s])
+        base = int(codes[s]) << (maxbits - L)
+        span = 1 << (maxbits - L)
+        tbl_sym[base: base + span] = s
+        tbl_len[base: base + span] = L
+    bits = np.unpackbits(np.frombuffer(blob[pos:], dtype=np.uint8))
+    out = np.empty(n_syms, dtype=np.uint8)
+    # Vectorized prefix values: vals[i] = int value of bits[i:i+maxbits].
+    # The symbol loop itself stays serial (variable-length decode has a true
+    # dependency chain) but each step is just two table lookups.
+    pad = np.concatenate([bits, np.zeros(maxbits, dtype=np.uint8)])
+    pows = (1 << np.arange(maxbits - 1, -1, -1, dtype=np.uint32))
+    vals = np.lib.stride_tricks.sliding_window_view(pad, maxbits)[: bits.size + 1] @ pows
+    bitpos = 0
+    tl = [int(v) for v in tbl_len]
+    ts = tbl_sym
+    vlist = vals.tolist()
+    for i in range(n_syms):
+        w = vlist[bitpos]
+        out[i] = ts[w]
+        bitpos += tl[w]
+    return out.tobytes()

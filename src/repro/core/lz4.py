@@ -1,0 +1,244 @@
+"""From-scratch LZ4 *block format* codec (paper §2.2).
+
+The real ``lz4`` bindings are not available offline, so this implements the
+LZ4 block wire format (https://github.com/lz4/lz4 — lz4_Block_format.md)
+independently:
+
+  sequence := token | [litlen ext 255*] | literals | offset(2B LE)
+              | [matchlen ext 255*]
+  token    := (literal_length:4 | match_length-4 :4)
+  rules    := last sequence is literals-only; matches >= 4 bytes;
+              offset in [1, 65535]; last 5 bytes are always literals;
+              last match must end >= 12 bytes before the block end.
+
+Two compressors, mirroring the reference library:
+
+* ``level <= 3`` — **fast/greedy**: single-probe hash table (the reference
+  LZ4 fast path) with an acceleration skip on incompressible stretches.
+* ``level >= 4`` — **HC-ish**: chained hash search; chain depth grows with
+  level ("LZ4-HC typically results in ~20% better ratio", paper §2.2).
+
+The matcher hashes 4-byte windows ("quadruplets" — the same granularity the
+paper highlights for CF-ZLIB's fast levels) with hashes precomputed for the
+whole buffer in one vectorized numpy pass — the SIMD-hashing analogue.
+
+Pure-Python sequence loops bound absolute MB/s; benchmarks report this
+handicap explicitly (EXPERIMENTS.md §Fidelity) and use C-backed zstd
+negative levels as the native-speed LZ4-class proxy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["compress_block", "decompress_block"]
+
+_MIN_MATCH = 4
+_MFLIMIT = 12      # last match must end this many bytes before block end
+_LAST_LITERALS = 5
+
+
+def _hash_all(data: np.ndarray, log2_size: int) -> np.ndarray:
+    """Vectorized 4-byte-window multiplicative hash for every position."""
+    n = data.size
+    if n < 4:
+        return np.zeros(0, dtype=np.uint32)
+    w = (
+        data[: n - 3].astype(np.uint32)
+        | (data[1: n - 2].astype(np.uint32) << 8)
+        | (data[2: n - 1].astype(np.uint32) << 16)
+        | (data[3:].astype(np.uint32) << 24)
+    )
+    return ((w * np.uint32(2654435761)) >> np.uint32(32 - log2_size)).astype(np.uint32)
+
+
+def _match_len(a: np.ndarray, i: int, j: int, limit: int) -> int:
+    """Length of common prefix of a[i:limit] and a[j:...] (vectorized probe)."""
+    n = limit - i
+    if n <= 0:
+        return 0
+    step = 64
+    total = 0
+    while total < n:
+        k = min(step, n - total)
+        x = a[i + total: i + total + k]
+        y = a[j + total: j + total + k]
+        neq = np.nonzero(x != y)[0]
+        if neq.size:
+            return total + int(neq[0])
+        total += k
+        step = min(step * 4, 1 << 16)
+    return n
+
+
+def compress_block(data: bytes, level: int = 1, dict_prefix: bytes = b"") -> bytes:
+    """Compress ``data`` into an LZ4 block. Never fails; worst case expands.
+
+    ``dict_prefix`` primes the match window (real-LZ4 dictionary mode): the
+    prefix seeds the hash table and is matchable, but is never emitted —
+    the decoder must be given the same prefix.
+    """
+    prefix = dict_prefix[-65535:] if dict_prefix else b""
+    plen = len(prefix)
+    if plen:
+        buf = prefix + data
+        src = np.frombuffer(buf, dtype=np.uint8)
+        data = buf  # emit() slices literals out of the combined buffer
+    else:
+        src = np.frombuffer(data, dtype=np.uint8)
+    n = src.size
+    out = bytearray()
+    if n == plen:
+        return b"\x00"
+
+    def emit(lit_start: int, lit_end: int, mlen: int, dist: int):
+        litlen = lit_end - lit_start
+        token_lit = 15 if litlen >= 15 else litlen
+        token_match = 0 if mlen == 0 else (15 if mlen - _MIN_MATCH >= 15 else mlen - _MIN_MATCH)
+        out.append((token_lit << 4) | token_match)
+        if litlen >= 15:
+            rem = litlen - 15
+            while rem >= 255:
+                out.append(255)
+                rem -= 255
+            out.append(rem)
+        out.extend(data[lit_start:lit_end])
+        if mlen:
+            out.append(dist & 0xFF)
+            out.append((dist >> 8) & 0xFF)
+            if mlen - _MIN_MATCH >= 15:
+                rem = mlen - _MIN_MATCH - 15
+                while rem >= 255:
+                    out.append(255)
+                    rem -= 255
+                out.append(rem)
+
+    if n - plen < _MFLIMIT + 1:
+        emit(plen, n, 0, 0)
+        return bytes(out)
+
+    log2_size = 14 if level <= 3 else 16
+    hashes = _hash_all(src, log2_size)
+    match_limit = n - _LAST_LITERALS
+    scan_limit = n - _MFLIMIT
+
+    if level <= 3:
+        # ---- greedy fast path: single-slot hash table + acceleration skip
+        table = np.full(1 << log2_size, -1, dtype=np.int64)
+        for j in range(0, min(plen, hashes.size)):   # seed with dictionary
+            table[hashes[j]] = j
+        anchor = plen
+        i = plen
+        searches = 0
+        accel_shift = 6  # reference LZ4: skip grows after misses
+        while i < scan_limit:
+            h = hashes[i]
+            cand = table[h]
+            table[h] = i
+            if cand >= 0 and i - cand <= 65535 and src[cand] == src[i] and \
+                    np.array_equal(src[cand:cand + 4], src[i:i + 4]):
+                mlen = _match_len(src, i, cand, match_limit)
+                if mlen >= _MIN_MATCH:
+                    emit(anchor, i, mlen, i - cand)
+                    i += mlen
+                    anchor = i
+                    searches = 0
+                    continue
+            searches += 1
+            i += 1 + (searches >> accel_shift)
+    else:
+        # ---- HC path: chained hash search, depth scales with level
+        depth = {4: 4, 5: 8, 6: 16, 7: 32, 8: 64, 9: 128}.get(min(level, 9), 16)
+        head = np.full(1 << log2_size, -1, dtype=np.int64)
+        prev = np.full(n, -1, dtype=np.int64)
+        for j in range(0, min(plen, hashes.size)):   # seed with dictionary
+            hj = hashes[j]
+            prev[j] = head[hj]
+            head[hj] = j
+        anchor = plen
+        i = plen
+        while i < scan_limit:
+            h = hashes[i]
+            cand = head[h]
+            best_len, best_dist = 0, 0
+            tries = depth
+            while cand >= 0 and tries > 0 and i - cand <= 65535:
+                # quick reject: a longer match must at least extend past best_len
+                probe = i + best_len
+                if probe < match_limit and cand + best_len < n and src[cand + best_len] == src[probe]:
+                    mlen = _match_len(src, i, cand, match_limit)
+                    if mlen > best_len:
+                        best_len, best_dist = mlen, i - cand
+                cand = prev[cand]
+                tries -= 1
+            prev[i] = head[h]
+            head[h] = i
+            if best_len >= _MIN_MATCH:
+                emit(anchor, i, best_len, best_dist)
+                # insert skipped positions into the chain (sparsely, for speed)
+                for j in range(i + 1, min(i + best_len, scan_limit), 4):
+                    hj = hashes[j]
+                    prev[j] = head[hj]
+                    head[hj] = j
+                i += best_len
+                anchor = i
+            else:
+                i += 1
+
+    emit(anchor, n, 0, 0)  # trailing literals
+    return bytes(out)
+
+
+def decompress_block(comp: bytes, orig_len: int, dict_prefix: bytes = b"") -> bytes:
+    """Decompress an LZ4 block of known decompressed size.
+
+    ``dict_prefix`` must be the same window-priming dictionary used at
+    compression time (matches may reference into it)."""
+    prefix = dict_prefix[-65535:] if dict_prefix else b""
+    plen = len(prefix)
+    src = comp
+    dst = bytearray(plen + orig_len)
+    dst[:plen] = prefix
+    i = 0
+    o = plen
+    n = len(src)
+    while i < n:
+        token = src[i]
+        i += 1
+        litlen = token >> 4
+        if litlen == 15:
+            while True:
+                b = src[i]
+                i += 1
+                litlen += b
+                if b != 255:
+                    break
+        if litlen:
+            dst[o:o + litlen] = src[i:i + litlen]
+            i += litlen
+            o += litlen
+        if i >= n:
+            break  # last sequence: literals only
+        dist = src[i] | (src[i + 1] << 8)
+        i += 2
+        mlen = (token & 0xF) + _MIN_MATCH
+        if (token & 0xF) == 15:
+            while True:
+                b = src[i]
+                i += 1
+                mlen += b
+                if b != 255:
+                    break
+        ref = o - dist
+        if dist >= mlen:  # non-overlapping: one slice copy
+            dst[o:o + mlen] = dst[ref:ref + mlen]
+            o += mlen
+        else:             # overlapping match: replicate pattern
+            while mlen > 0:
+                chunk = min(mlen, o - ref)
+                dst[o:o + chunk] = dst[ref:ref + chunk]
+                o += chunk
+                mlen -= chunk
+    if o - plen != orig_len:
+        raise ValueError(f"LZ4 block decoded {o - plen} bytes, expected {orig_len}")
+    return bytes(dst[plen:])

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: BitShuffle preconditioner (paper §2.2, Blosc-style).
+
+Device-side bit transpose so tensors can be preconditioned *in HBM, before
+they leave the chip* — used by the compressed-collective path and by
+zero-copy checkpoint staging.  The host-side numpy twin lives in
+``repro.core.precond``; semantics are defined by ``ref.bitshuffle_ref``.
+
+TPU mapping notes (DESIGN.md §3): bitshuffle is pure VPU work — shifts,
+masks and an 8-lane weighted reduction; no MXU involvement.  Tiles are
+chosen so a block of (block_n x itemsize) bytes plus its (8*itemsize x
+block_n/8) output fit comfortably in VMEM (default 64 KiB in + 64 KiB out
+per grid step), and the lane dimension (block_n) is a multiple of 1024 so
+both views keep 128-lane alignment after the internal reshapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitshuffle", "bitunshuffle"]
+
+_DEF_BLOCK = 8192  # elements per grid step
+
+
+def _bitshuffle_kernel(x_ref, o_ref):
+    x = x_ref[...]                                   # (bn, I) uint8
+    bn, itemsize = x.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (x[:, :, None] >> shifts[None, None, :]) & jnp.uint8(1)
+    bits = bits.reshape(bn, itemsize * 8).T          # (8I, bn)
+    grp = bits.reshape(itemsize * 8, bn // 8, 8).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << shifts.astype(jnp.uint32))[None, None, :]
+    o_ref[...] = jnp.sum(grp * weights, axis=-1).astype(jnp.uint8)
+
+
+def _bitunshuffle_kernel(y_ref, o_ref):
+    y = y_ref[...]                                   # (8I, bn//8) uint8
+    nbits, bn8 = y.shape
+    itemsize = nbits // 8
+    bn = bn8 * 8
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (y[:, :, None] >> shifts[None, None, :]) & jnp.uint8(1)
+    bits = bits.reshape(nbits, bn).T                 # (bn, 8I)
+    grp = bits.reshape(bn, itemsize, 8).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << shifts.astype(jnp.uint32))[None, None, :]
+    o_ref[...] = jnp.sum(grp * weights, axis=-1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def bitshuffle(x: jnp.ndarray, *, block_n: int = _DEF_BLOCK,
+               interpret: bool = True) -> jnp.ndarray:
+    """(N, itemsize) uint8 -> (8*itemsize, N//8) uint8.  N % block_n == 0."""
+    n, itemsize = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0 and block_n % 8 == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _bitshuffle_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, itemsize), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8 * itemsize, block_n // 8), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8 * itemsize, n // 8), jnp.uint8),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("itemsize", "block_n", "interpret"))
+def bitunshuffle(y: jnp.ndarray, itemsize: int, *, block_n: int = _DEF_BLOCK,
+                 interpret: bool = True) -> jnp.ndarray:
+    """(8*itemsize, N//8) uint8 -> (N, itemsize) uint8."""
+    nbits, nover8 = y.shape
+    assert nbits == 8 * itemsize
+    n = nover8 * 8
+    block_n = min(block_n, n)
+    assert n % block_n == 0 and block_n % 8 == 0
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _bitunshuffle_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((nbits, block_n // 8), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_n, itemsize), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, itemsize), jnp.uint8),
+        interpret=interpret,
+    )(y)

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *semantic definition* of each kernel; the Pallas versions are
+tested against them over shape/dtype sweeps (tests/test_kernels.py) and the
+host-side numpy preconditioners in ``repro.core.precond`` agree with them
+byte-for-byte (tests assert that too, closing the loop host <-> device).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "byteshuffle_ref", "byteunshuffle_ref",
+    "bitshuffle_ref", "bitunshuffle_ref",
+    "delta_ref", "undelta_ref",
+    "qpack_ref", "qunpack_ref",
+]
+
+
+# ---------------------------------------------------------------------------
+# Byte shuffle (Blosc "shuffle"): (N, itemsize) uint8 -> (itemsize, N)
+# ---------------------------------------------------------------------------
+
+def byteshuffle_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (N, itemsize) uint8 -> (itemsize, N) uint8 (byte transpose)."""
+    return x.T
+
+
+def byteunshuffle_ref(y: jnp.ndarray) -> jnp.ndarray:
+    """y: (itemsize, N) -> (N, itemsize)."""
+    return y.T
+
+
+# ---------------------------------------------------------------------------
+# Bit shuffle (Blosc "bitshuffle"), little-endian bit order:
+#   (N, itemsize) uint8 -> (8*itemsize, N//8) uint8,  N % 8 == 0
+# ---------------------------------------------------------------------------
+
+def bitshuffle_ref(x: jnp.ndarray) -> jnp.ndarray:
+    n, itemsize = x.shape
+    assert n % 8 == 0, "bitshuffle needs a multiple of 8 elements"
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (x[:, :, None] >> shifts[None, None, :]) & jnp.uint8(1)  # (N, I, 8)
+    bits = bits.reshape(n, itemsize * 8).T                           # (8I, N)
+    grp = bits.reshape(itemsize * 8, n // 8, 8)
+    weights = (jnp.uint8(1) << shifts)[None, None, :]
+    return jnp.sum(grp.astype(jnp.uint32) * weights.astype(jnp.uint32),
+                   axis=-1).astype(jnp.uint8)                        # (8I, N//8)
+
+
+def bitunshuffle_ref(y: jnp.ndarray, itemsize: int) -> jnp.ndarray:
+    nbits, nover8 = y.shape
+    assert nbits == 8 * itemsize
+    n = nover8 * 8
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (y[:, :, None] >> shifts[None, None, :]) & jnp.uint8(1)   # (8I, N/8, 8)
+    bits = bits.reshape(nbits, n).T                                  # (N, 8I)
+    grp = bits.reshape(n, itemsize, 8)
+    weights = (jnp.uint8(1) << shifts)[None, None, :]
+    return jnp.sum(grp.astype(jnp.uint32) * weights.astype(jnp.uint32),
+                   axis=-1).astype(jnp.uint8)                        # (N, I)
+
+
+# ---------------------------------------------------------------------------
+# Delta (wraparound) over unsigned integer streams
+# ---------------------------------------------------------------------------
+
+def delta_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Global delta: out[0] = x[0]; out[i] = x[i] - x[i-1] (mod 2^k)."""
+    prev = jnp.concatenate([x[:1] * 0, x[:-1]])
+    return x - prev
+
+
+def undelta_ref(d: jnp.ndarray) -> jnp.ndarray:
+    return jnp.cumsum(d, dtype=d.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block int8 quantization (per-row scale) — the compressed-collective payload
+# ---------------------------------------------------------------------------
+
+def qpack_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (R, C) float -> (q int8 (R, C), scale f32 (R, 1)); scale = amax/127."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = amax / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(xf / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def qunpack_ref(q: jnp.ndarray, scale: jnp.ndarray,
+                dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

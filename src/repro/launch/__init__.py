@@ -1,0 +1,2 @@
+"""repro.launch — mesh construction, per-cell step builders, the multi-pod
+dry-run, and the train/serve drivers."""

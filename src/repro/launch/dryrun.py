@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell, on the single-pod 16x16 mesh
+AND the 2-pod (2,16,16) mesh:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...).lower(
+            *input_specs(...))
+        compiled = lowered.compile()
+        compiled.memory_analysis()       # proves it fits per device
+        compiled.cost_analysis()         # FLOPs / bytes for the roofline
+
+plus a trip-count-aware HLO cost walk (launch/hlo_cost.py).  Results land as
+JSON in artifacts/dryrun/ (read by benchmarks/roofline.py) and a summary
+line prints per cell.  Any failure here (sharding mismatch, OOM at
+compile, unsupported collective) is a bug in the framework.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both [--out artifacts/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config, list_archs, shapes_for, SHAPES
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (active_params, build_cell, parallelism_for,
+                                total_params)
+
+V5E = {"flops_bf16": 197e12, "hbm_gbps": 819e9, "ici_gbps": 50e9}
+
+
+PERF_KEYS = ("rms_einsum", "softmax_bf16_probs", "mamba_bf16_y", "bf16_grads",
+             "compressed_tp")
+
+
+def set_perf_flags(names: list[str]) -> dict:
+    """Toggle §Perf variants; returns train_kwargs additions."""
+    from repro.models import layers as L, ssm as S, rwkv as R
+    L.PERF_FLAGS["rms_einsum"] = "rms_einsum" in names
+    L.PERF_FLAGS["softmax_bf16_probs"] = "softmax_bf16_probs" in names
+    S.PERF_FLAGS["mamba_bf16_y"] = "mamba_bf16_y" in names
+    R.PERF_FLAGS["compressed_tp"] = "compressed_tp" in names
+    return {"bf16_grads": True} if "bf16_grads" in names else {}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             pcfg_overrides: dict | None = None,
+             train_kwargs: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pcfg = parallelism_for(cfg)
+    if pcfg_overrides:
+        import dataclasses
+        pcfg = dataclasses.replace(pcfg, **pcfg_overrides)
+    cell = build_cell(cfg, shape, mesh, pcfg, train_kwargs=train_kwargs)
+
+    from repro.parallel.actctx import activation_context
+    t0 = time.monotonic()
+    with mesh, activation_context(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis() or {}
+    # trip-count-aware walk (xla cost_analysis counts loop bodies ONCE —
+    # useless under scan-over-layers; see launch/hlo_cost.py)
+    cost = analyze_hlo(compiled.as_text())
+
+    n_dev = mesh.devices.size
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = active_params(cfg)
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+
+    flops_dev = cost.flops
+    bytes_dev = cost.bytes
+    wire_dev = cost.coll_wire
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(n_dev),
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "params_total": int(total_params(cfg)),
+        "params_active": int(n_active),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_wire_bytes": wire_dev,
+            "arg_bytes": mem.argument_size_in_bytes,
+            "out_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        },
+        "collectives": {"per_kind": cost.per_kind,
+                        "total": {"count": cost.coll_count,
+                                  "payload_bytes": cost.coll_payload,
+                                  "wire_bytes": cost.coll_wire},
+                        "unknown_trip_loops": cost.unknown_loops},
+        "xla_flops_once": float(xla_cost.get("flops", 0.0)),
+        "model_flops_global": float(model_flops),
+        "roofline_s": {
+            "compute": flops_dev / V5E["flops_bf16"],
+            "memory": bytes_dev / V5E["hbm_gbps"],
+            "collective": wire_dev / V5E["ici_gbps"],
+        },
+    }
+    terms = rec["roofline_s"]
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["mfu_vs_roofline"] = (
+        (model_flops / n_dev / V5E["flops_bf16"]) / max(max(terms.values()), 1e-30))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="", help="artifact filename suffix (perf variants)")
+    ap.add_argument("--accum", type=int, default=0, help="override gradient-accumulation count")
+    ap.add_argument("--perf", default="",
+                    help=f"comma list of perf variants: {','.join(PERF_KEYS)}")
+    args = ap.parse_args()
+
+    perf_names = [n for n in args.perf.split(",") if n]
+    extra_train_kwargs = set_perf_flags(perf_names)
+    if args.accum:
+        extra_train_kwargs["accum"] = args.accum
+        if not args.tag:
+            args.tag = f"__accum{args.accum}"
+    if perf_names and not args.tag:
+        args.tag = "__perf-" + "-".join(perf_names)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [s.name for s in shapes_for(cfg)]
+        if args.shape != "all":
+            if args.shape not in shapes:
+                print(f"-- {arch} {args.shape}: not assigned (skipped)")
+                continue
+            shapes = [args.shape]
+        for sname in shapes:
+            for mp in meshes:
+                mesh_tag = "2x16x16" if mp else "16x16"
+                try:
+                    rec = run_cell(arch, sname, mp,
+                                   train_kwargs=extra_train_kwargs or None)
+                except Exception as e:
+                    failures.append((arch, sname, mesh_tag, e))
+                    print(f"FAIL {arch} {sname} {mesh_tag}: {e}")
+                    traceback.print_exc()
+                    continue
+                fn = f"{arch}__{sname}__{mesh_tag}{args.tag}.json"
+                with open(os.path.join(args.out, fn), "w") as fh:
+                    json.dump(rec, fh, indent=1)
+                t = rec["roofline_s"]
+                print(f"OK {arch:26s} {sname:12s} {mesh_tag:8s} "
+                      f"compile={rec['compile_s']:6.1f}s "
+                      f"peak={rec['per_device']['peak_bytes']/2**30:6.2f}GiB "
+                      f"compute={t['compute']*1e3:8.2f}ms "
+                      f"mem={t['memory']*1e3:8.2f}ms "
+                      f"coll={t['collective']*1e3:8.2f}ms "
+                      f"-> {rec['bottleneck']}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        for f in failures:
+            print("  ", *f[:3], repr(f[3])[:200])
+        return 1
+    print("\nall dry-run cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,215 @@
+"""Per-(arch x shape) step builders for the dry-run and the drivers.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input — no allocation; ``build_cell`` wires a
+step function + abstract args + in/out NamedShardings for one
+(arch, shape, mesh) cell, ready for ``jax.jit(...).lower(...)``.
+
+Shape semantics (assignment block):
+  train_4k     train_step  (tokens+targets, global_batch x seq)
+  prefill_32k  prefill     (prompt batch -> logits + built cache)
+  decode_32k   decode_step (1 new token against a seq_len KV cache)
+  long_500k    decode_step (ssm/hybrid archs only — sub-quadratic state)
+
+Modality stubs per the assignment: [audio] enc-dec takes precomputed frame
+embeddings (B, S, d); [vlm] takes precomputed patch embeddings (B, 256, d).
+For the VLM, "seq_len" counts the full context (patches + text).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.models import Model, ModelConfig
+from repro.models.specs import tree_paths
+from repro.parallel import (ParallelismConfig, param_shardings,
+                            batch_shardings, cache_shardings, opt_shardings)
+from repro.train.step import (TrainState, make_train_step,
+                              abstract_train_state)
+
+__all__ = ["input_specs", "build_cell", "parallelism_for", "total_params",
+           "active_params", "SEAMLESS_DEC_PROMPT", "SEAMLESS_CROSS_LEN"]
+
+SEAMLESS_DEC_PROMPT = 256     # decoder prompt length for enc-dec prefill
+SEAMLESS_CROSS_LEN = 4096     # encoder context length for enc-dec decode
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def total_params(cfg: ModelConfig) -> int:
+    flat = tree_paths(Model(cfg).param_specs())
+    n = 0
+    for spec in flat.values():
+        k = 1
+        for d in spec.shape:
+            k *= d
+        n += k
+    return n
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Per-token active params: expert tensors count K/E of their size."""
+    flat = tree_paths(Model(cfg).param_specs())
+    n = 0
+    for path, spec in flat.items():
+        k = 1
+        for d in spec.shape:
+            k *= d
+        if "experts" in spec.axes:
+            k = k * cfg.experts_per_token // max(cfg.n_experts, 1)
+        n += k
+    return n
+
+
+def parallelism_for(cfg: ModelConfig, compressed_dp: bool = False) -> ParallelismConfig:
+    big = True  # FSDP always on at 256+ chips: replicated fp32 masters never fit
+    return ParallelismConfig(zero3=big, zero1_moments=True,
+                             shard_kv_cache_time=True, experts_fsdp=True,
+                             compressed_dp=compressed_dp)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract batch for train/prefill kinds (decode builds cache too)."""
+    B, S = shape.global_batch, shape.seq_len
+    it = jnp.int32
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            return {"frames": _sds((B, S, cfg.d_model), jnp.float32),
+                    "tokens": _sds((B, S), it), "targets": _sds((B, S), it)}
+        if cfg.n_img_tokens:
+            st = S - cfg.n_img_tokens
+            return {"patches": _sds((B, cfg.n_img_tokens, cfg.d_model), jnp.float32),
+                    "tokens": _sds((B, st), it), "targets": _sds((B, st), it)}
+        return {"tokens": _sds((B, S), it), "targets": _sds((B, S), it)}
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {"frames": _sds((B, S, cfg.d_model), jnp.float32),
+                    "tokens": _sds((B, SEAMLESS_DEC_PROMPT), it)}
+        if cfg.n_img_tokens:
+            return {"patches": _sds((B, cfg.n_img_tokens, cfg.d_model), jnp.float32),
+                    "tokens": _sds((B, S - cfg.n_img_tokens), it)}
+        return {"tokens": _sds((B, S), it)}
+    # decode: one new token
+    return {"tokens": _sds((B, 1), it)}
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    fn: Any
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    static_argnums: tuple = ()
+
+
+def _metrics_sharding(mesh):
+    return NamedSharding(mesh, P())
+
+
+def default_accum(cfg: ModelConfig, shape: ShapeSpec, mesh) -> int:
+    """Microbatch count so the per-device residual-carry memory (the
+    scan-over-groups activation saves, B_loc*S*d*2B*n_groups) stays under
+    ~6 GiB — the napkin-math knob that keeps every train cell inside v5e
+    HBM (EXPERIMENTS.md §Dry-run)."""
+    dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp *= mesh.shape[a]
+    b_loc = max(shape.global_batch // dp, 1)
+    resid = b_loc * shape.seq_len * cfg.d_model * 2 * cfg.n_groups
+    for accum in (1, 2, 4, 8):
+        if resid / accum <= 6 * 2**30 and (shape.global_batch // dp) % accum == 0:
+            return accum
+    return 8
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               pcfg: ParallelismConfig | None = None,
+               train_kwargs: dict | None = None) -> Cell:
+    # flash-style query chunking for any long-context full pass
+    if shape.kind in ("train", "prefill") and shape.seq_len >= 2048 and not cfg.q_chunk:
+        cfg = dataclasses.replace(cfg, q_chunk=256 if shape.kind == "train" else 512)
+    model = Model(cfg)
+    pcfg = pcfg or parallelism_for(cfg)
+    batch = input_specs(cfg, shape)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        big = total_params(cfg) >= 200e9
+        kwargs = dict(bf16_moments=big, accum=default_accum(cfg, shape, mesh))
+        kwargs.update(train_kwargs or {})
+        accum = kwargs["accum"]
+        if accum > 1:   # batch leaves become (accum, micro, ...)
+            batch = {k: _sds((accum, v.shape[0] // accum) + v.shape[1:], v.dtype)
+                     for k, v in batch.items()}
+        step = make_train_step(model, **kwargs)
+        state = abstract_train_state(model, bf16_moments=kwargs["bf16_moments"],
+                                     compress_grads=kwargs.get("compress_grads", False))
+        psh = param_shardings(model, mesh, pcfg)
+        osh = opt_shardings(model, mesh, pcfg)
+        state_sh = TrainState(
+            params=psh,
+            opt={"m": osh, "v": osh, "count": rep},
+            step=rep,
+            err=psh if state.err is not None else None)
+        if accum > 1:
+            from repro.parallel.sharding import dp_spec
+            bsh = {k: NamedSharding(
+                mesh, P(None, dp_spec(mesh, v.shape[1]),
+                        *([None] * (len(v.shape) - 2))))
+                for k, v in batch.items()}
+        else:
+            bsh = batch_shardings(mesh, batch)
+        return Cell(fn=step, args=(state, batch),
+                    in_shardings=(state_sh, bsh),
+                    out_shardings=(state_sh, _metrics_sharding(mesh)),
+                    donate_argnums=(0,))
+
+    from repro.parallel.sharding import dp_spec
+    params = model.abstract(dtype=jnp.bfloat16)
+    psh = param_shardings(model, mesh, pcfg)
+    dp = dp_spec(mesh, shape.global_batch)
+    logits_sh = NamedSharding(mesh, P(dp, None))
+
+    if shape.kind == "prefill":
+        S_ctx = shape.seq_len if not cfg.is_encdec else SEAMLESS_DEC_PROMPT
+        fn = lambda p, b: model.prefill(p, b, max_len=S_ctx)
+        cache_abs = model.init_cache(
+            shape.global_batch, S_ctx,
+            enc_len=shape.seq_len if cfg.is_encdec else 0, abstract=True)
+        csh = cache_shardings(model, mesh, pcfg, cache_abs)
+        bsh = batch_shardings(mesh, batch)
+        return Cell(fn=fn, args=(params, batch),
+                    in_shardings=(psh, bsh),
+                    out_shardings=(logits_sh, csh))
+
+    # decode
+    cache_abs = model.init_cache(
+        shape.global_batch, shape.seq_len,
+        enc_len=SEAMLESS_CROSS_LEN if cfg.is_encdec else 0, abstract=True)
+    csh = cache_shardings(model, mesh, pcfg, cache_abs)
+    tok = batch["tokens"]
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    pos = _sds((), jnp.int32)
+    fn = model.decode_step
+    return Cell(fn=fn, args=(params, cache_abs, tok, pos),
+                in_shardings=(psh, csh, tok_sh, rep),
+                out_shardings=(logits_sh, csh),
+                donate_argnums=(1,))

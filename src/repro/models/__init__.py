@@ -1,0 +1,13 @@
+"""repro.models — unified LM stack covering the 10 assigned architectures.
+
+Pure-functional modules (params are pytrees of arrays) with a ParamSpec
+layer that yields, from one definition: real initialized params (smoke
+tests), ShapeDtypeStructs (dry-run), and NamedShardings (pjit).
+"""
+
+from .specs import ParamSpec, init_params, abstract_params, map_logical
+from .config import ModelConfig, LayerPattern
+from .model import Model
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "map_logical",
+           "Model", "ModelConfig", "LayerPattern"]

@@ -1,0 +1,308 @@
+"""Core transformer building blocks: norms, RoPE, GQA attention, dense FFN.
+
+All functions are pure: ``(params, inputs, cfg) -> outputs``.  Each block
+has a ``*_specs`` twin returning the ParamSpec tree so init/abstract/
+sharding derive from one definition (see specs.py).
+
+Attention covers every assigned-arch variant behind flags:
+  * GQA with arbitrary kv_heads (incl. MQA kv=1 — paligemma)
+  * qk-norm (qwen3), QKV bias (qwen2.5), attn-logit softcap (gemma2)
+  * sliding-window "local" layers (gemma2 alternating pattern)
+  * bidirectional / prefix-LM masks (seamless encoder, paligemma image
+    prefix), cross-attention (seamless decoder)
+  * KV-cache decode with dynamic position update
+  * query-chunked (flash-style) scoring for long prefill so the S x S
+    score tensor never materializes beyond (q_chunk x S)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .specs import ParamSpec
+from repro.parallel.actctx import constrain
+
+__all__ = [
+    "rms_norm", "rope", "attn_specs", "attention", "ffn_specs", "ffn",
+    "norm_specs",
+]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def norm_specs(d_model: int) -> dict:
+    return {"scale": ParamSpec((d_model,), ("embed",), init="ones")}
+
+
+PERF_FLAGS = {
+    # §Perf iteration A: avoid materializing an fp32 copy of the residual
+    # stream in rms_norm.  XLA turns the bf16->f32 convert that a
+    # conventional rms does first into an f32 SHADOW COPY of the whole
+    # scan-saved residual stack (measured: +7.5 GiB live + 2x convert
+    # traffic per group at 400B scale; see EXPERIMENTS.md §Perf).  The
+    # einsum-variance form keeps products bf16 with fp32 accumulation
+    # (exactly the MXU contract) and applies the inverse in bf16.
+    "rms_einsum": False,
+    # §Perf iteration B: store softmax probabilities in bf16 (row stats
+    # stay fp32) so the (q_chunk, T) tensors — the largest attention
+    # traffic — halve.
+    "softmax_bf16_probs": False,
+}
+
+
+def rms_norm(p: dict, x: jnp.ndarray, eps: float = 1e-6,
+             zero_centered: bool = False) -> jnp.ndarray:
+    """RMSNorm; fp32 statistics either via a full fp32 copy (baseline,
+    paper-faithful numerics) or via einsum accumulation (§Perf A)."""
+    dt = x.dtype
+    scale = p["scale"].astype(jnp.float32)
+    if zero_centered:
+        scale = 1.0 + scale
+    if PERF_FLAGS["rms_einsum"] and dt != jnp.float32:
+        var = jnp.einsum("...d,...d->...", x, x,
+                         preferred_element_type=jnp.float32) / x.shape[-1]
+        inv = jax.lax.rsqrt(var + eps)[..., None]
+        return x * (inv * scale).astype(dt)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    return (xn * scale).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (B, S, H, D) (D even), positions: (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg, cross: bool = False) -> dict:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    sp = {
+        "wq": ParamSpec((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, Dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        sp["bq"] = ParamSpec((H, Dh), ("heads", "head_dim"), init="zeros")
+        sp["bk"] = ParamSpec((KV, Dh), ("kv_heads", "head_dim"), init="zeros")
+        sp["bv"] = ParamSpec((KV, Dh), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        sp["q_norm"] = ParamSpec((Dh,), (None,), init="ones")
+        sp["k_norm"] = ParamSpec((Dh,), (None,), init="ones")
+    return sp
+
+
+def _mask_bias(mode: str, q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+               window: int = 0, prefix_len: int = 0,
+               k_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Additive mask (B?, S_q, S_k) in fp32: 0 = attend, -inf = blocked."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    if mode == "bidir":
+        ok = jnp.ones_like(q + k, dtype=bool)
+    elif mode == "causal":
+        ok = k <= q
+    elif mode == "sliding":
+        ok = (k <= q) & (k > q - window)
+    elif mode == "prefix":
+        # bidirectional within the first prefix_len positions, causal after
+        ok = (k <= q) | (k < prefix_len)
+    else:  # pragma: no cover
+        raise ValueError(mode)
+    if k_valid is not None:
+        ok = ok & k_valid[..., None, :]
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _scores_softmax_values(q, k, v, bias, softcap: float, scale: float):
+    """q: (B,S,KV,G,D), k/v: (B,T,KV,D), bias: (B,1|S?,T) broadcastable.
+    Returns (B,S,KV,G,D) fp32."""
+    if PERF_FLAGS["softmax_bf16_probs"] and q.dtype != jnp.float32:
+        # bf16 operands, fp32 accumulation (the MXU contract) — no fp32
+        # copies of q/k hit HBM
+        s = jnp.einsum("bskgd,btkd->bkgst",
+                       (q.astype(jnp.float32) * scale).astype(q.dtype), k,
+                       preferred_element_type=jnp.float32)
+    else:
+        s = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + bias[:, None, None, :, :]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, -1e30)  # rows that are fully masked
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    if PERF_FLAGS["softmax_bf16_probs"] and v.dtype != jnp.float32:
+        # §Perf B: probabilities carry ~8 significant bits anyway after
+        # exp; storing them bf16 halves the dominant (S_q, T) traffic.
+        return jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+
+
+def attention(p: dict, x: jnp.ndarray, cfg, *,
+              mode: str = "causal",
+              positions: Optional[jnp.ndarray] = None,
+              cache: Optional[dict] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              update_cache: bool = True,
+              build_cache: int = 0,
+              cache_dtype=jnp.bfloat16,
+              kv_input: Optional[jnp.ndarray] = None,
+              window: int = 0,
+              prefix_len: int = 0,
+              q_chunk: int = 0) -> tuple[jnp.ndarray, Optional[dict]]:
+    """GQA attention.  Returns (out (B,S,d), cache-or-None).
+
+    * training: cache None, build_cache 0 -> full self-attention over x.
+    * prefill: build_cache = max_len -> also returns {"k","v"} padded to
+      max_len with this sequence's (roped) kv written at positions 0..S-1.
+    * decode: cache {"k","v"} (B, T, KV, D); x is (B, 1, d); cache_pos a
+      scalar int32 — new kv written at that slot, attention over the cache.
+    * cross-attention: kv_input (B, T, d) (encoder output, training) or
+      cache given with update_cache=False (decode over static encoder kv —
+      no rope, every slot valid).
+    """
+    B, S, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // KV
+    cdt = x.dtype
+    scale = Dh ** -0.5
+    is_cross = (kv_input is not None) or (cache is not None and not update_cache)
+
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt)),
+                  ("dp", None, "tp", None))
+    if not (cache is not None and not update_cache):
+        kv_src = kv_input if kv_input is not None else x
+        k = constrain(jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(cdt)),
+                      ("dp", None, "tp", None))
+        v = constrain(jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(cdt)),
+                      ("dp", None, "tp", None))
+    else:
+        k = v = None                      # static cross cache: kv precomputed
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+        if k is not None:
+            k = k + p["bk"].astype(cdt)
+            v = v + p["bv"].astype(cdt)
+    if cfg.qk_norm:
+        q = rms_norm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+        if k is not None:
+            k = rms_norm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if not is_cross and cfg.rope_theta > 0:           # no rope on cross-attn
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and update_cache:
+        # decode: write this step's kv into the cache at cache_pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+    elif cache is not None:
+        ck, cv = cache["k"], cache["v"]               # static (cross) cache
+        new_cache = cache
+
+    if cache is not None:
+        T = ck.shape[1]
+        k_pos = jnp.arange(T, dtype=jnp.int32)[None]                  # (1, T)
+        if update_cache:
+            k_valid = (k_pos <= cache_pos)
+            if mode == "sliding" and window:
+                k_valid = k_valid & (k_pos > cache_pos - window)
+        else:
+            k_valid = jnp.ones_like(k_pos, dtype=bool)
+        bias = jnp.where(k_valid, 0.0, -jnp.inf).astype(jnp.float32)[:, None, :]
+        bias = jnp.broadcast_to(bias, (B, S, T))
+        q5 = q.reshape(B, S, KV, G, Dh)
+        out = _scores_softmax_values(q5, ck.astype(cdt), cv.astype(cdt),
+                                     bias, cfg.attn_softcap, scale)
+    else:
+        q5 = q.reshape(B, S, KV, G, Dh)
+        k_pos_full = positions if kv_input is None else jnp.broadcast_to(
+            jnp.arange(k.shape[1], dtype=jnp.int32)[None], (B, k.shape[1]))
+        if q_chunk and S > q_chunk and S % q_chunk == 0:
+            # flash-style: per-chunk bias so no (S, S) mask materializes
+            nq = S // q_chunk
+            q_blocks = q5.reshape(B, nq, q_chunk, KV, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+            p_blocks = positions.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+
+            @jax.checkpoint   # recompute probs in bwd: never save (c,T) scores
+            def step(_, qb):
+                qq, pp = qb
+                bb = _mask_bias(mode, pp, k_pos_full, window=window,
+                                prefix_len=prefix_len)                # (B,c,T)
+                o = _scores_softmax_values(qq, k, v, bb, cfg.attn_softcap, scale)
+                return 0, o
+
+            _, outs = jax.lax.scan(step, 0, (q_blocks, p_blocks))
+            out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KV, G, Dh)
+        else:
+            bias_full = _mask_bias(mode, positions, k_pos_full, window=window,
+                                   prefix_len=prefix_len)             # (B,S,T)
+            out = _scores_softmax_values(q5, k, v, bias_full, cfg.attn_softcap, scale)
+        if build_cache:
+            zk = jnp.zeros((B, build_cache, KV, Dh), cache_dtype)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(zk, k.astype(cache_dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(zk, v.astype(cache_dtype), (0, 0, 0, 0)),
+            }
+
+    out = out.astype(cdt).reshape(B, S, H, Dh)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    return proj, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def ffn_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "w_down": ParamSpec((d_ff, d_model), ("ff", "embed")),
+    }
+
+
+def ffn(p: dict, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    cdt = x.dtype
+    g = constrain(jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cdt)),
+                  ("dp", None, "tp"))
+    u = constrain(jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cdt)),
+                  ("dp", None, "tp"))
+    if act == "gelu":
+        g = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(cdt)
+    else:
+        g = jax.nn.silu(g.astype(jnp.float32)).astype(cdt)
+    return jnp.einsum("bsf,fd->bsd", g * u, p["w_down"].astype(cdt))

@@ -1,0 +1,8 @@
+"""repro.parallel — sharding rules (DP/TP/EP/SP/ZeRO), parallelism policy,
+and the compressed-collective path (paper-derived, see DESIGN.md §2)."""
+
+from .sharding import (ParallelismConfig, param_shardings, batch_shardings,
+                       cache_shardings, opt_shardings, logical_to_pspec)
+
+__all__ = ["ParallelismConfig", "param_shardings", "batch_shardings",
+           "cache_shardings", "opt_shardings", "logical_to_pspec"]

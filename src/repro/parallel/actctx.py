@@ -1,0 +1,79 @@
+"""Activation-sharding context: with_sharding_constraint hooks for model code.
+
+GSPMD resolves einsum sharding conflicts by cost model, and with ZeRO-3
+weights (FSDP over "data") + batch-sharded activations it will happily
+re-shard *activations* over the data axis (measured: 100s-of-GiB replicated
+activation tensors at 400B scale).  Pinning every layer-boundary activation
+to P(dp, ...) forces the partitioner to gather *weights* instead — the
+FSDP-streaming schedule every production framework uses.
+
+Model code calls ``constrain(x, kinds)`` with logical kinds per dim:
+``"dp"`` (batch), ``"tp"`` (tensor-parallel feature dim), or None.  Without
+an active context (unit tests, single-host examples) it is a no-op; the
+launcher sets the context per cell.  Divisibility-gated like the param
+rules.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["set_activation_context", "clear_activation_context", "constrain",
+           "activation_context"]
+
+_CTX: dict = {"mesh": None, "dp": (), "tp": None}
+
+
+def set_activation_context(mesh: Mesh, tp_axis: str = "model") -> None:
+    dp = tuple(a for a in mesh.axis_names if a != tp_axis)
+    _CTX.update(mesh=mesh, dp=dp, tp=tp_axis)
+
+
+def clear_activation_context() -> None:
+    _CTX.update(mesh=None, dp=(), tp=None)
+
+
+class activation_context:
+    def __init__(self, mesh: Mesh, tp_axis: str = "model"):
+        self.mesh, self.tp_axis = mesh, tp_axis
+
+    def __enter__(self):
+        set_activation_context(self.mesh, self.tp_axis)
+
+    def __exit__(self, *a):
+        clear_activation_context()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, kinds) -> jax.Array:
+    """kinds: tuple of 'dp' | 'tp' | None, one per dim of x (may be shorter;
+    missing dims are unconstrained)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    entries = []
+    for i, dim in enumerate(x.shape):
+        kind = kinds[i] if i < len(kinds) else None
+        ax = None
+        if kind == "dp" and _CTX["dp"]:
+            if dim % _axis_size(mesh, _CTX["dp"]) == 0:
+                ax = _CTX["dp"] if len(_CTX["dp"]) > 1 else _CTX["dp"][0]
+        elif kind == "tp" and _CTX["tp"]:
+            if dim % _axis_size(mesh, _CTX["tp"]) == 0:
+                ax = _CTX["tp"]
+        entries.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

@@ -1,0 +1,6 @@
+"""repro.serve — batched serving: slot-based continuous batching over
+jit'd prefill/decode steps."""
+
+from .engine import ServeEngine, sample_logits
+
+__all__ = ["ServeEngine", "sample_logits"]

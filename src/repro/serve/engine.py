@@ -1,0 +1,143 @@
+"""Slot-based batched serving engine.
+
+The analysis-side operating point from the paper (§1: "little per-event
+CPU available, decompression-speed-bound") is serving: the engine reads
+prompt batches from compressed BasketFiles, keeps a fixed pool of B cache
+slots, and runs jit'd prefill/decode steps; finished slots are refilled
+from the queue (continuous batching).  Decode state is a single stacked
+cache pytree so one decode_step serves all slots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeEngine", "sample_logits"]
+
+
+def sample_logits(logits, key, temperature: float = 0.0):
+    """Greedy (t=0) or temperature sampling.  logits: (B, V) fp32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req_id: int = -1
+    pos: int = 0
+    out: list = dataclasses.field(default_factory=list)
+    max_new: int = 0
+    active: bool = False
+
+
+class ServeEngine:
+    """Continuous-batching engine over one model's prefill/decode steps.
+
+    All slots share one prompt length per prefill call (bucketed); decode
+    is one token across every active slot per step.
+    """
+
+    def __init__(self, model, params, *, batch_slots: int, max_len: int,
+                 eos_id: int = 1, temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.key = jax.random.key(seed)
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.cache = model.init_cache(batch_slots, max_len)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=max_len))
+        self._decode = jax.jit(model.decode_step)
+        self._queue: list = []
+        self._done: dict = {}
+        self._next_id = 0
+
+    # -- public API ------------------------------------------------------
+
+    def submit(self, tokens: np.ndarray, max_new: int = 32) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, np.asarray(tokens, np.int32), max_new))
+        return rid
+
+    def run(self) -> dict:
+        """Drain the queue; returns {req_id: np.ndarray(generated tokens)}."""
+        while self._queue or any(s.active for s in self.slots):
+            self._admit()
+            self._decode_round()
+        out, self._done = self._done, {}
+        return out
+
+    # -- internals -------------------------------------------------------
+
+    def _free_slots(self):
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def _admit(self):
+        free = self._free_slots()
+        if not free or not self._queue:
+            return
+        take = self._queue[: len(free)]
+        del self._queue[: len(take)]
+        # bucket to one prompt length (pad left with 0s, mask via loss-free
+        # prefill: we simply prefill at the bucketed length)
+        plen = max(len(t) for _, t, _ in take)
+        toks = np.zeros((self.B, plen), np.int32)
+        for slot_i, (rid, t, max_new) in zip(free, take):
+            toks[slot_i, plen - len(t):] = t
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(toks)})
+        # write the prefilled rows into the engine cache
+        rows = jnp.asarray(free[: len(take)], jnp.int32)
+        self.cache = jax.tree.map(
+            lambda full, new: full.at[:, rows].set(new[:, rows]),
+            self.cache, cache)
+        logits_np = np.asarray(logits, np.float32)
+        for slot_i, (rid, t, max_new) in zip(free, take):
+            s = self.slots[slot_i]
+            s.req_id, s.pos, s.out, s.max_new, s.active = rid, plen, [], max_new, True
+            first = int(np.argmax(logits_np[slot_i]))
+            s.out.append(first)
+
+    def _decode_round(self, rounds: int = 8):
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if not active:
+            return
+        for _ in range(rounds):
+            active = [i for i, s in enumerate(self.slots) if s.active]
+            if not active:
+                return
+            pos = max(self.slots[i].pos for i in active)
+            if pos >= self.max_len - 1:
+                for i in active:
+                    self._finish(i)
+                return
+            last = np.zeros((self.B, 1), np.int32)
+            for i in active:
+                last[i, 0] = self.slots[i].out[-1]
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(last),
+                jnp.asarray(pos, jnp.int32))
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(sample_logits(logits, sub, self.temperature))
+            for i in active:
+                s = self.slots[i]
+                tok = int(nxt[i])
+                s.out.append(tok)
+                s.pos = pos + 1
+                if tok == self.eos_id or len(s.out) >= s.max_new:
+                    self._finish(i)
+
+    def _finish(self, slot_i: int):
+        s = self.slots[slot_i]
+        self._done[s.req_id] = np.asarray(s.out, np.int32)
+        s.active = False

@@ -1,0 +1,11 @@
+"""repro.train — from-scratch AdamW, mixed-precision train step with
+gradient accumulation, clipping, LR schedules, and the (beyond-paper)
+compressed-gradient hook."""
+
+from .optim import adamw_init, adamw_update, clip_by_global_norm, warmup_cosine
+from .step import (TrainState, make_train_step, init_train_state,
+                   abstract_train_state)
+
+__all__ = ["adamw_init", "adamw_update", "clip_by_global_norm",
+           "warmup_cosine", "TrainState", "make_train_step",
+           "init_train_state", "abstract_train_state"]

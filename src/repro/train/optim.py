@@ -1,0 +1,67 @@
+"""AdamW + utilities, from scratch (no optax in this environment).
+
+Moments are fp32 trees shaped like the params; their sharding is derived
+in ``repro.parallel.opt_shardings`` (ZeRO-1 over "data" where divisible).
+``bf16_moments`` halves optimizer HBM for the 400B config (EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update", "clip_by_global_norm", "warmup_cosine"]
+
+
+def adamw_init(params, bf16_moments: bool = False):
+    mdt = jnp.bfloat16 if bf16_moments else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    count = opt["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        step = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), \
+               m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt["m"])
+    flat_v = tdef.flatten_up_to(opt["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def warmup_cosine(step, *, peak_lr=3e-4, warmup=100, total=10_000,
+                  min_ratio=0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,142 @@
+"""Mixed-precision train step: fp32 master params, bf16 compute, fp32
+grads, AdamW; optional microbatch gradient accumulation (lax.scan) and the
+error-feedback int8 gradient-compression hook (the paper's preconditioner
+insight applied to the DP collective — see DESIGN.md §2.3; the wire-level
+shard_map variant lives in repro.parallel.compressed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optim import adamw_init, adamw_update, clip_by_global_norm, warmup_cosine
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+    err: Any = None          # error-feedback residual (grad compression)
+
+
+def init_train_state(model, key, *, bf16_moments: bool = False,
+                     compress_grads: bool = False) -> TrainState:
+    params = model.init(key, dtype=jnp.float32)
+    opt = adamw_init(params, bf16_moments=bf16_moments)
+    err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params) \
+        if compress_grads else None
+    return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32),
+                      err=err)
+
+
+def abstract_train_state(model, *, bf16_moments: bool = False,
+                         compress_grads: bool = False) -> TrainState:
+    """ShapeDtypeStruct twin of init_train_state (dry-run, no allocation)."""
+    params = model.abstract(dtype=jnp.float32)
+    mdt = jnp.bfloat16 if bf16_moments else jnp.float32
+    sds = lambda dt: (lambda p: jax.ShapeDtypeStruct(p.shape, dt))
+    opt = {"m": jax.tree.map(sds(mdt), params),
+           "v": jax.tree.map(sds(mdt), params),
+           "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    err = jax.tree.map(sds(jnp.bfloat16), params) if compress_grads else None
+    return TrainState(params=params, opt=opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32), err=err)
+
+
+def _quantize_ef(g, e):
+    """int8 error-feedback quantization of one gradient tensor.
+
+    Simulates the compressed DP reduction's numerics inside the jit'd step:
+    the value the optimizer sees is dequant(quant(g + err)); the residual
+    carries to the next step.  (The wire-level version quantizes before the
+    all-reduce — repro.parallel.compressed — with identical numerics.)
+    """
+    gf = g.astype(jnp.float32) + e.astype(jnp.float32)
+    flat = gf.reshape(-1)
+    amax = jnp.max(jnp.abs(flat))
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127)
+    deq = (q * scale).reshape(g.shape)
+    return deq.astype(g.dtype), (gf - deq).astype(e.dtype)
+
+
+def make_train_step(model, *, peak_lr=3e-4, warmup=100, total_steps=10_000,
+                    clip_norm: float = 1.0, accum: int = 1,
+                    bf16_moments: bool = False,
+                    compress_grads: bool = False,
+                    bf16_grads: bool = False,
+                    weight_decay: float = 0.1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum > 1``: batch leaves must be shaped (accum, micro, ...); grads
+    are averaged over microbatches via lax.scan (bounded-memory, and the
+    unit of straggler-tolerant re-dispatch in the training loop).
+
+    ``bf16_grads`` (§Perf D): differentiate with respect to the bf16 cast
+    of the params, so gradient DP reductions move bf16 on the wire (half
+    the collective bytes; the optimizer still updates fp32 masters).
+    """
+    compute_dtype = jnp.dtype(model.cfg.dtype)
+
+    def cast(p):
+        return p.astype(compute_dtype) if p.dtype == jnp.float32 else p
+
+    def loss_fn(params, batch):
+        return model.loss(jax.tree.map(cast, params), batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    grad_fn_bf16 = jax.value_and_grad(model.loss, has_aux=True)
+
+    def one_micro(params, mb):
+        if bf16_grads:
+            (loss, metrics), grads = grad_fn_bf16(jax.tree.map(cast, params), mb)
+        else:
+            (loss, metrics), grads = grad_fn(params, mb)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if accum == 1:
+            grads, metrics = one_micro(params, batch)
+        else:
+            def body(acc, mb):
+                g, m = one_micro(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32)
+                                   / accum, acc, g)
+                return acc, m
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, zeros, batch)
+            metrics = jax.tree.map(lambda x: x.mean(0), ms)
+
+        if compress_grads:
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_e = tdef.flatten_up_to(state.err)
+            pairs = [_quantize_ef(g, e) for g, e in zip(flat_g, flat_e)]
+            grads = tdef.unflatten([p[0] for p in pairs])
+            new_err = tdef.unflatten([p[1] for p in pairs])
+        else:
+            new_err = state.err
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = warmup_cosine(state.step, peak_lr=peak_lr, warmup=warmup,
+                           total=total_steps)
+        new_params, new_opt = adamw_update(grads, state.opt, params, lr,
+                                           weight_decay=weight_decay)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1, err=new_err)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,127 @@
+"""Codec layer: roundtrips (incl. hypothesis), level semantics, dictionary
+use, and the paper's Fig. 2/6 ordering properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CODECS, CompressionConfig, compress, decompress,
+                        train_dictionary)
+from repro.core.policy import PROFILES, choose, precond_for_array
+
+ALGOS = sorted(CODECS)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("level", [1, 5, 9])
+def test_roundtrip_all_payload_kinds(algo, level, rng):
+    if algo == "none":
+        level = 0
+    payloads = [
+        b"",
+        b"a",
+        bytes(rng.integers(0, 256, 10_000, dtype=np.uint8)),      # random
+        bytes(rng.integers(97, 105, 10_000, dtype=np.uint8)),     # text-ish
+        np.cumsum(rng.integers(1, 9, 3000)).astype(">i4").tobytes(),  # offsets
+        b"\x00" * 5000,                                           # runs
+    ]
+    for data in payloads:
+        cfg = CompressionConfig(algo=algo, level=level)
+        comp = compress(data, cfg)
+        assert decompress(comp, len(data), cfg) == data
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.binary(min_size=0, max_size=4096),
+       algo=st.sampled_from(["zlib", "lz4", "zstd", "repro-deflate"]),
+       level=st.integers(1, 9))
+def test_roundtrip_property(data, algo, level):
+    cfg = CompressionConfig(algo=algo, level=level)
+    assert decompress(compress(data, cfg), len(data), cfg) == data
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.binary(min_size=1, max_size=2048),
+       precond=st.sampled_from(["shuffle4", "bitshuffle4", "shuffle8",
+                                "delta4+shuffle4", "bitshuffle2"]))
+def test_roundtrip_with_precond_property(data, precond):
+    cfg = CompressionConfig(algo="zstd", level=3, precond=precond)
+    assert decompress(compress(data, cfg), len(data), cfg) == data
+
+
+def test_level_zero_is_passthrough():
+    data = b"hello world" * 100
+    cfg = CompressionConfig(algo="zlib", level=0)
+    assert compress(data, cfg) == data
+
+
+def test_level_monotonicity_ratio(rng):
+    """Paper §2: level 9 must not compress worse than level 1 (per algo)."""
+    base = bytes(rng.integers(97, 117, 2000, dtype=np.uint8)) * 30
+    for algo in ("zlib", "zstd", "lzma", "lz4", "repro-deflate"):
+        c1 = len(compress(base, CompressionConfig(algo=algo, level=1)))
+        c9 = len(compress(base, CompressionConfig(algo=algo, level=9)))
+        assert c9 <= c1 * 1.02, (algo, c1, c9)
+
+
+def test_fig6_offset_array_ordering(rng):
+    """The paper's Fig. 6 mechanism: a ROOT offset array is near-
+    incompressible for plain LZ4, while Shuffle/BitShuffle preconditioning
+    makes LZ4 beat plain-ZLIB-class ratios."""
+    offsets = (0x01000000
+               + np.cumsum(rng.integers(1, 5, 20_000))).astype(">u4").tobytes()
+    lz4_plain = len(compress(offsets, CompressionConfig("lz4", 1)))
+    lz4_shuf = len(compress(offsets, CompressionConfig("lz4", 1, "shuffle4")))
+    lz4_delta = len(compress(offsets, CompressionConfig("lz4", 1, "delta4+shuffle4")))
+    zlib_plain = len(compress(offsets, CompressionConfig("zlib", 6)))
+    assert lz4_plain > 0.9 * len(offsets), "offsets should be ~incompressible for LZ4"
+    assert lz4_shuf < 0.3 * lz4_plain
+    assert lz4_delta < zlib_plain, "preconditioned LZ4 must beat plain zlib (Fig 6)"
+
+
+def test_float_bitshuffle_helps(rng):
+    floats = (rng.standard_normal(30_000) * 0.001).astype("<f4").tobytes()
+    plain = len(compress(floats, CompressionConfig("lz4", 1)))
+    bshuf = len(compress(floats, CompressionConfig("lz4", 1, "bitshuffle4")))
+    assert bshuf < plain
+
+
+def test_dictionary_improves_small_buffers(rng):
+    samples = [bytes(rng.integers(97, 103, 300, dtype=np.uint8)) + b"suffix-common-tail"
+               for _ in range(200)]
+    d = train_dictionary(samples[:150], size=2048)
+    cfg_nd = CompressionConfig("zstd", 3)
+    cfg_d = CompressionConfig("zstd", 3, dictionary=d)
+    test = samples[150:]
+    plain = sum(len(compress(s, cfg_nd)) for s in test)
+    withd = sum(len(compress(s, cfg_d)) for s in test)
+    assert withd < plain, (withd, plain)
+    for s in test[:5]:
+        assert decompress(compress(s, cfg_d), len(s), cfg_d) == s
+
+
+def test_dictionary_cross_codec(rng):
+    """Paper §3: zstd-trained dictionaries are usable for zlib and lz4."""
+    samples = [b"event{" + bytes(rng.integers(97, 101, 120, dtype=np.uint8)) + b"}"
+               for _ in range(100)]
+    d = train_dictionary(samples, size=1024)
+    for algo in ("zlib", "lz4"):
+        cfg = CompressionConfig(algo, 5, dictionary=d)
+        for s in samples[:5]:
+            assert decompress(compress(s, cfg), len(s), cfg) == s
+
+
+def test_policy_profiles_and_heuristics(rng):
+    assert {"production", "analysis", "checkpoint", "wire"} <= set(PROFILES)
+    assert precond_for_array(np.zeros(64, np.float32)) == "bitshuffle4"
+    assert precond_for_array(np.cumsum(np.ones(64, np.int64))).startswith("delta8")
+    assert precond_for_array(rng.integers(0, 100, 64).astype(np.int32)).startswith("shuffle")
+    cfg = choose("w", np.zeros(64, np.float32), "analysis")
+    assert cfg.algo == "lz4" and cfg.precond == "bitshuffle4"
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(ValueError):
+        CompressionConfig(algo="zlib", level=11)
+    with pytest.raises(KeyError):
+        CompressionConfig(algo="nope", level=3)

@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), swept over
+shapes/dtypes, plus the host<->device agreement loop: the numpy
+preconditioners in repro.core.precond must produce byte-identical output
+to the device kernels."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import precond as hostp
+from repro.kernels import ops, ref
+from repro.kernels import bitshuffle as bs, byteshuffle as bys, delta as dl, qpack as qp
+
+DTYPES = [jnp.uint8, jnp.int8, jnp.int32, jnp.float32, jnp.float16, jnp.bfloat16]
+SIZES = [8, 64, 1000, 4096, 8192 + 64]
+
+
+def _bytes_of(x):
+    return np.frombuffer(np.asarray(x).tobytes(), np.uint8)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", SIZES)
+def test_bitshuffle_matches_ref_and_roundtrips(dtype, n, rng):
+    if n % 8:
+        n -= n % 8
+    x = jnp.asarray(rng.integers(0, 200, n)).astype(dtype)
+    item = x.dtype.itemsize
+    y = ops.bitshuffle_bytes(x, interpret=True)
+    mat = _bytes_of(x).reshape(-1, item)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(ref.bitshuffle_ref(jnp.asarray(mat))))
+    back = ops.bitunshuffle_bytes(y, x.dtype, n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", SIZES)
+def test_byteshuffle_matches_ref_and_roundtrips(dtype, n, rng):
+    x = jnp.asarray(rng.integers(0, 200, n)).astype(dtype)
+    item = x.dtype.itemsize
+    y = ops.byteshuffle_bytes(x, interpret=True)
+    mat = _bytes_of(x).reshape(-1, item)
+    np.testing.assert_array_equal(np.asarray(y), mat.T)
+    back = ops.byteunshuffle_bytes(y, x.dtype, n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@pytest.mark.parametrize("n", [16, 1000, 4096, 10000])
+def test_delta_matches_ref_and_roundtrips(n, rng):
+    x = jnp.asarray(np.cumsum(rng.integers(1, 9, n)).astype(np.uint32))
+    d = ops.delta_u32(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(ref.delta_ref(x)))
+    back = ops.undelta_u32(d, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (256, 384), (1000, 64)])
+def test_qpack_matches_ref(shape, rng):
+    g = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    q, s, orig = ops.quantize_int8(g, interpret=True)
+    qr, sr = ref.qpack_ref(g)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    out = ops.dequantize_int8(q, s, orig, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.qunpack_ref(qr, sr)), rtol=1e-6)
+    # quantization error bounded by scale/2 per element
+    err = np.abs(np.asarray(out) - np.asarray(g))
+    bound = np.asarray(sr) * 0.5 + 1e-7
+    assert (err <= bound + 1e-6).all()
+
+
+def test_qpack_zero_rows():
+    g = jnp.zeros((4, 64), jnp.float32)
+    q, s, orig = ops.quantize_int8(g, interpret=True)
+    assert np.all(np.asarray(q) == 0)
+    out = ops.dequantize_int8(q, s, orig, interpret=True)
+    assert np.all(np.asarray(out) == 0)
+
+
+# ---------------------------------------------------------------------------
+# host (numpy precond) <-> device (pallas) agreement — closes the loop so a
+# tensor preconditioned on device decompresses with the host pipeline.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 4096])
+def test_host_device_bitshuffle_agree(n, rng):
+    arr = rng.standard_normal(n).astype(np.float32)
+    host_bytes = hostp.apply_precond("bitshuffle4", arr.tobytes())
+    dev = ops.bitshuffle_bytes(jnp.asarray(arr), interpret=True)
+    assert np.asarray(dev).tobytes() == host_bytes
+
+
+@pytest.mark.parametrize("n", [64, 4096])
+def test_host_device_byteshuffle_agree(n, rng):
+    arr = rng.integers(0, 1 << 30, n).astype(np.uint32)
+    host_bytes = hostp.apply_precond("shuffle4", arr.tobytes())
+    dev = ops.byteshuffle_bytes(jnp.asarray(arr), interpret=True)
+    assert np.asarray(dev).tobytes() == host_bytes
+
+
+def test_blockspec_grid_paths(rng):
+    """Multi-block grids agree with single-block (BlockSpec indexing)."""
+    x = jnp.asarray(rng.integers(0, 255, (16384, 4)), dtype=jnp.uint8)
+    one = bs.bitshuffle(x, block_n=16384, interpret=True)
+    many = bs.bitshuffle(x, block_n=2048, interpret=True)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(many))
+    y1 = bys.byteshuffle(x, block_n=16384, interpret=True)
+    y2 = bys.byteshuffle(x, block_n=4096, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))

@@ -1,0 +1,31 @@
+"""Dev tool: lower one cell and list the biggest HLO tensors (replication hunting)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, collections
+import jax
+from repro.configs import get_config, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, parallelism_for
+from repro.parallel.actctx import activation_context
+
+arch, shape = sys.argv[1], sys.argv[2]
+cfg = get_config(arch)
+mesh = make_production_mesh(multi_pod=len(sys.argv) > 3)
+cell = build_cell(cfg, SHAPES[shape], mesh, parallelism_for(cfg))
+with mesh, activation_context(mesh):
+    c = jax.jit(cell.fn, in_shardings=cell.in_shardings, out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums).lower(*cell.args).compile()
+mem = c.memory_analysis()
+print(f"peak={(mem.argument_size_in_bytes+mem.output_size_in_bytes+mem.temp_size_in_bytes-mem.alias_size_in_bytes)/2**30:.1f}GiB "
+      f"temp={mem.temp_size_in_bytes/2**30:.1f} arg={mem.argument_size_in_bytes/2**30:.1f} out={mem.output_size_in_bytes/2**30:.1f} alias={mem.alias_size_in_bytes/2**30:.1f}")
+sizes = collections.Counter()
+for m in re.finditer(r'(bf16|f32|s32|u32|f16|pred|u8|s8)\[([0-9,]+)\]', c.as_text()):
+    dims = [int(d) for d in m.group(2).split(",")]
+    n = 1
+    for d in dims: n *= d
+    b = n * {"bf16":2,"f32":4,"s32":4,"u32":4,"f16":2,"pred":1,"u8":1,"s8":1}[m.group(1)]
+    key = f"{m.group(1)}[{m.group(2)}]"
+    if b > 2**27:
+        sizes[key] = b
+for k, v in sizes.most_common(18):
+    print(f"  {v/2**30:8.2f}GiB {k}")
