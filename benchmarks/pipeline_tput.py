@@ -1,6 +1,8 @@
 """Data-pipeline read throughput: the paper's "simultaneous read and
 decompression of multiple events" — tokens/s with 0 vs N decompression
-workers, and checkpoint write/read bandwidth through the codec policy."""
+workers, pipelined parallel basket *writes* through the repro.io engine
+(workers=1 vs workers=8 must favor 8 on any multi-core host), and the
+decompress-ahead reader on the token hot path."""
 
 from __future__ import annotations
 
@@ -10,10 +12,48 @@ import time
 
 import numpy as np
 
+from repro.core import CompressionConfig
 from repro.core.bfile import BasketFile
+from repro.core.codec import is_pure_python
 from repro.data import TokenPipeline, write_token_shards
 
 from .common import emit
+
+#: per-codec write-bench payload: pure-Python codecs run ~MB/s, C codecs
+#: ~100MB/s — size so each timing is ~seconds, not minutes.
+_WRITE_LEVEL = {"zstd": 3, "lz4": 1, "zlib": 6}
+
+
+def _write_payload_bytes(algo: str) -> int:
+    return (3 << 20) if is_pure_python(algo) else (16 << 20)
+
+
+def write_scaling_rows(td: str, algos=("zstd", "lz4"),
+                       workers_list=(1, 8)) -> list[dict]:
+    """Pipelined basket compression: same bytes out, N cores in.  The
+    engine is pre-warmed so the rows compare steady-state throughput, not
+    one-off pool startup."""
+    from repro.core.bfile import BasketWriter
+    from repro.io import CompressionEngine
+
+    rows = []
+    rng = np.random.default_rng(7)
+    for algo in algos:
+        n = _write_payload_bytes(algo) // 4
+        arr = (rng.standard_normal(n) * 0.01).astype(np.float32)
+        cfg = CompressionConfig(algo, _WRITE_LEVEL.get(algo, 3), "shuffle4")
+        for workers in workers_list:
+            path = os.path.join(td, f"w_{algo}_{workers}.bskt")
+            with CompressionEngine(workers) as eng:
+                eng.warmup(algo)
+                t0 = time.perf_counter()
+                with BasketWriter(path, engine=eng) as w:
+                    w.write_branch("x", arr, cfg, 256 * 1024)
+                dt = time.perf_counter() - t0
+            rows.append({"bench": "pipeline",
+                         "what": f"write_{algo}_w{workers}",
+                         "MBps": round(arr.nbytes / dt / 1e6, 1)})
+    return rows
 
 
 def run(out_csv: str | None = None) -> list[dict]:
@@ -29,6 +69,13 @@ def run(out_csv: str | None = None) -> list[dict]:
             dt = time.perf_counter() - t0
             rows.append({"bench": "pipeline", "what": f"branch_read_w{workers}",
                          "MBps": round(arr.nbytes / dt / 1e6, 1)})
+        # decompress-ahead reader (repro.io.prefetch) on the same branch
+        with BasketFile(shards[0], workers=4, prefetch=4) as f:
+            t0 = time.perf_counter()
+            arr = f.read_branch("tokens")
+            dt = time.perf_counter() - t0
+            rows.append({"bench": "pipeline", "what": "branch_read_prefetch",
+                         "MBps": round(arr.nbytes / dt / 1e6, 1)})
         pipe = TokenPipeline(shards, batch=8, seq_len=512, prefetch=4,
                              decomp_workers=4)
         n_tok = 0
@@ -40,6 +87,7 @@ def run(out_csv: str | None = None) -> list[dict]:
         pipe.close()
         rows.append({"bench": "pipeline", "what": "token_stream",
                      "MBps": round(n_tok * 4 / dt / 1e6, 1)})
+        rows += write_scaling_rows(td)
     emit(rows, out_csv)
     return rows
 

@@ -12,7 +12,7 @@ import sys
 import time
 
 from . import (fig2_survey, fig3_decompression, fig45_cfzlib, fig6_precond,
-               fig_dict, pipeline_tput, roofline)
+               fig_dict, fig_parallel, pipeline_tput, roofline)
 
 BENCHES = {
     "fig2": fig2_survey,
@@ -20,6 +20,7 @@ BENCHES = {
     "fig45": fig45_cfzlib,
     "fig6": fig6_precond,
     "fig_dict": fig_dict,
+    "fig_parallel": fig_parallel,
     "pipeline": pipeline_tput,
     "roofline": roofline,
 }

@@ -22,12 +22,13 @@ from __future__ import annotations
 import base64
 import json
 import os
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 import numpy as np
 
-from .basket import BasketMeta, join_baskets, pack_basket, split_array, unpack_basket
+from .basket import BasketMeta, join_baskets, split_array, unpack_basket
 from .codec import CompressionConfig
 
 __all__ = ["BasketWriter", "BasketFile", "write_arrays", "read_arrays"]
@@ -36,9 +37,15 @@ _MAGIC = b"RBKTv001"
 
 
 class BasketWriter:
-    """Streaming writer with atomic commit."""
+    """Streaming writer with atomic commit.
 
-    def __init__(self, path: str):
+    ``workers>0`` (or an explicit shared ``engine``) turns on the parallel
+    I/O engine (repro.io.engine): baskets compress concurrently on a
+    bounded pool while this thread commits payloads in offset order —
+    output is byte-identical to the serial path.
+    """
+
+    def __init__(self, path: str, workers: int = 0, engine=None):
         self.path = str(path)
         self._tmp = self.path + ".tmp"
         os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
@@ -46,6 +53,12 @@ class BasketWriter:
         self._f.write(_MAGIC)
         self._branches: dict[str, dict] = {}
         self._closed = False
+        self._engine = engine
+        self._owns_engine = False
+        if engine is None and workers:
+            from repro.io.engine import CompressionEngine
+            self._engine = CompressionEngine(workers)
+            self._owns_engine = True
 
     def write_branch(self, name: str, arr: np.ndarray,
                      cfg: Optional[CompressionConfig] = None,
@@ -55,9 +68,14 @@ class BasketWriter:
             raise ValueError(f"branch {name!r} already written")
         cfg = cfg or CompressionConfig()
         arr = np.asarray(arr)
+        chunks = split_array(arr, target_basket_bytes)
+        engine = self._engine
+        if engine is None:
+            from repro.io.engine import CompressionEngine
+            engine = CompressionEngine(0)   # the serial path — no pools
+        packed = engine.pack_stream(chunks, cfg)
         baskets = []
-        for start, count, raw in split_array(arr, target_basket_bytes):
-            payload, meta = pack_basket(raw, cfg, entry_start=start, entry_count=count)
+        for _start, _count, payload, meta in packed:
             off = self._f.tell()
             self._f.write(payload)
             baskets.append({"offset": off, "meta": meta.to_json()})
@@ -68,6 +86,22 @@ class BasketWriter:
             "dictionary": base64.b64encode(cfg.dictionary).decode() if cfg.dictionary else None,
             "baskets": baskets,
         }
+        self._branches[name] = entry
+        return entry
+
+    def write_precompressed(self, name: str, *, dtype, shape, config,
+                            dictionary, baskets) -> dict:
+        """Append already-compressed ``(payload, meta_json)`` baskets as a
+        branch — the BufferMerger/fast-merge path (no recompression)."""
+        if name in self._branches:
+            raise ValueError(f"branch {name!r} already written")
+        out = []
+        for payload, meta_json in baskets:
+            off = self._f.tell()
+            self._f.write(payload)
+            out.append({"offset": off, "meta": dict(meta_json)})
+        entry = {"dtype": dtype, "shape": list(shape), "config": dict(config),
+                 "dictionary": dictionary, "baskets": out}
         self._branches[name] = entry
         return entry
 
@@ -87,6 +121,8 @@ class BasketWriter:
         self._f.close()
         os.replace(self._tmp, self.path)  # atomic commit
         self._closed = True
+        if self._owns_engine:
+            self._engine.close()
 
     def abort(self) -> None:
         if not self._closed:
@@ -94,6 +130,8 @@ class BasketWriter:
             if os.path.exists(self._tmp):
                 os.remove(self._tmp)
             self._closed = True
+            if self._owns_engine:
+                self._engine.close()
 
     def __enter__(self):
         return self
@@ -106,11 +144,24 @@ class BasketWriter:
 
 
 class BasketFile:
-    """Reader with optional thread-pool parallel decompression."""
+    """Reader with optional thread-pool parallel decompression.
 
-    def __init__(self, path: str, verify: bool = True):
+    ``workers``/``prefetch`` delegate reads to the parallel I/O engine:
+    ``workers`` sets the default decompression pool width, ``prefetch>0``
+    routes ``read_branch``/``read_entries`` through a decompress-ahead
+    :class:`repro.io.prefetch.PrefetchReader` (``prefetch`` = read-ahead
+    depth in baskets) with an LRU decompressed-basket cache.
+    """
+
+    def __init__(self, path: str, verify: bool = True,
+                 workers: int = 0, prefetch: int = 0):
         self.path = str(path)
         self.verify = verify
+        self.workers = workers
+        self.prefetch = prefetch
+        self._engine = None
+        self._readers: dict = {}
+        self._reader_lock = threading.Lock()
         with open(self.path, "rb") as f:
             head = f.read(8)
             if head != _MAGIC:
@@ -130,6 +181,15 @@ class BasketFile:
         d = entry.get("dictionary")
         return base64.b64decode(d) if d else None
 
+    def read_basket_payload(self, name: str, i: int) -> bytes:
+        """Compressed on-disk payload of one basket (no decompression) —
+        the fast-merge path."""
+        entry = self.branches[name]
+        b = entry["baskets"][i]
+        with open(self.path, "rb") as f:
+            f.seek(b["offset"])
+            return f.read(b["meta"]["comp_len"])
+
     def read_basket_raw(self, name: str, i: int) -> bytes:
         entry = self.branches[name]
         b = entry["baskets"][i]
@@ -139,9 +199,26 @@ class BasketFile:
             payload = f.read(meta.comp_len)
         return unpack_basket(payload, meta, self._dictionary(entry), verify=self.verify)
 
-    def read_branch(self, name: str, workers: int = 0) -> np.ndarray:
+    def _reader(self, name: str):
+        """Cached PrefetchReader per branch (engine shared across them);
+        locked — one BasketFile may serve readers on several threads."""
+        with self._reader_lock:
+            if name not in self._readers:
+                from repro.io.engine import CompressionEngine
+                from repro.io.prefetch import PrefetchReader
+                if self._engine is None:
+                    self._engine = CompressionEngine(self.workers or 2)
+                self._readers[name] = PrefetchReader(
+                    self, name, ahead=self.prefetch, engine=self._engine)
+            return self._readers[name]
+
+    def read_branch(self, name: str, workers: Optional[int] = None) -> np.ndarray:
         """Read + decompress a branch; ``workers>0`` = parallel decompression
         (the paper's simultaneous-read-and-decompress)."""
+        if workers is None:
+            workers = self.workers
+        if self.prefetch:
+            return self._reader(name).read_all()
         entry = self.branches[name]
         n = len(entry["baskets"])
         if workers and n > 1:
@@ -152,7 +229,11 @@ class BasketFile:
         return join_baskets(chunks, entry["dtype"], tuple(entry["shape"]))
 
     def read_entries(self, name: str, start: int, stop: int) -> np.ndarray:
-        """Row-range read touching only the covering baskets (seekability)."""
+        """Row-range read touching only the covering baskets (seekability).
+        With ``prefetch>0`` the decompress-ahead reader also schedules the
+        baskets *after* the range, hiding latency for forward scans."""
+        if self.prefetch:
+            return self._reader(name).read_entries(start, stop)
         entry = self.branches[name]
         shape = tuple(entry["shape"])
         chunks, first_entry = [], None
@@ -182,6 +263,22 @@ class BasketFile:
         c = self.compressed_bytes(name)
         return self.raw_bytes(name) / c if c else float("inf")
 
+    def close(self) -> None:
+        """Release prefetch readers and the engine pool (no-op unless
+        ``workers``/``prefetch`` were used)."""
+        for r in self._readers.values():
+            r.close()
+        self._readers.clear()
+        if self._engine is not None:
+            self._engine.close()
+            self._engine = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()
+
 
 # ---------------------------------------------------------------------------
 # pytree-of-arrays convenience (used by the checkpointer)
@@ -189,15 +286,18 @@ class BasketFile:
 
 def write_arrays(path: str, arrays: dict[str, np.ndarray],
                  cfg_for: Optional[callable] = None,
-                 target_basket_bytes: int = 1 << 20) -> None:
+                 target_basket_bytes: int = 1 << 20,
+                 workers: int = 0) -> None:
     """Write a flat dict of named arrays; ``cfg_for(name, arr)`` picks the
-    per-branch CompressionConfig (the codec policy hook)."""
-    with BasketWriter(path) as w:
+    per-branch CompressionConfig (the codec policy hook); ``workers>0``
+    compresses baskets in parallel (identical bytes)."""
+    with BasketWriter(path, workers=workers) as w:
         for name, arr in arrays.items():
             cfg = cfg_for(name, np.asarray(arr)) if cfg_for else None
             w.write_branch(name, arr, cfg, target_basket_bytes)
 
 
-def read_arrays(path: str, workers: int = 0) -> dict[str, np.ndarray]:
-    f = BasketFile(path)
-    return {name: f.read_branch(name, workers=workers) for name in f.branch_names()}
+def read_arrays(path: str, workers: int = 0, prefetch: int = 0) -> dict[str, np.ndarray]:
+    with BasketFile(path, workers=workers, prefetch=prefetch) as f:
+        return {name: f.read_branch(name, workers=workers)
+                for name in f.branch_names()}

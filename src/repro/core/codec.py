@@ -49,6 +49,10 @@ class Codec:
     compress: Callable  # (data, level, dictionary) -> bytes
     decompress: Callable  # (comp, orig_len, dictionary) -> bytes
     max_level: int = 9
+    # True = the codec runs in the Python interpreter and holds the GIL, so
+    # thread-level basket parallelism can't scale it; the parallel I/O
+    # engine (repro.io.engine) routes such codecs to a process pool instead.
+    pure_python: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -152,11 +156,12 @@ def _id_d(comp: bytes, orig_len: int, d: Optional[bytes]) -> bytes:
 CODECS: dict[str, Codec] = {
     "none": Codec("none", _id_c, _id_d, max_level=0),
     "zlib": Codec("zlib", _zlib_c, _zlib_d),
-    "lz4": Codec("lz4", _lz4_c, _lz4_d),
+    "lz4": Codec("lz4", _lz4_c, _lz4_d, pure_python=True),
     "lzma": Codec("lzma", _lzma_c, _lzma_d),
-    "repro-deflate": Codec("repro-deflate", _rdef_c, _rdef_d),
-    "repro-deflate-ref": Codec("repro-deflate-ref", _rdef_ref_c, _rdef_d),
-    "repro-zstd": Codec("repro-zstd", _rzstd_c, _rdef_d),
+    "repro-deflate": Codec("repro-deflate", _rdef_c, _rdef_d, pure_python=True),
+    "repro-deflate-ref": Codec("repro-deflate-ref", _rdef_ref_c, _rdef_d,
+                               pure_python=True),
+    "repro-zstd": Codec("repro-zstd", _rzstd_c, _rdef_d, pure_python=True),
 }
 if HAVE_ZSTD:
     CODECS["zstd"] = Codec("zstd", _zstd_c, _zstd_d)
@@ -164,9 +169,15 @@ if HAVE_ZSTD:
 else:
     # offline fallback: the mechanism-faithful large-window engine stands in
     # for libzstd (DESIGN.md §4); "zstd-fast" maps to low-level large-window.
-    CODECS["zstd"] = Codec("zstd", _rzstd_c, _rdef_d)
+    CODECS["zstd"] = Codec("zstd", _rzstd_c, _rdef_d, pure_python=True)
     CODECS["zstd-fast"] = Codec("zstd-fast",
-                                lambda d, l, dic: _rzstd_c(d, 1, dic), _rdef_d)
+                                lambda d, l, dic: _rzstd_c(d, 1, dic), _rdef_d,
+                                pure_python=True)
+
+
+def is_pure_python(algo: str) -> bool:
+    """True when ``algo`` can't scale across threads (holds the GIL)."""
+    return algo != "none" and get_codec(algo).pure_python
 
 
 def register_codec(codec: Codec) -> None:

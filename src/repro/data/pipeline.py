@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import queue
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Iterator, Optional
 
 import numpy as np
@@ -28,6 +29,8 @@ import numpy as np
 from repro.core import CompressionConfig
 from repro.core.bfile import BasketFile, BasketWriter
 from repro.core.policy import choose
+from repro.io.engine import CompressionEngine
+from repro.io.prefetch import PrefetchReader
 
 __all__ = ["write_token_shards", "TokenPipeline"]
 
@@ -53,6 +56,7 @@ class TokenPipeline:
     def __init__(self, paths: list[str], *, batch: int, seq_len: int,
                  host_id: int = 0, n_hosts: int = 1,
                  prefetch: int = 4, decomp_workers: int = 4,
+                 prefetch_baskets: int = 4, readahead_files: int = 1,
                  seed: int = 0):
         if not paths:
             raise ValueError("no shard paths")
@@ -63,6 +67,8 @@ class TokenPipeline:
         self.seq_len = seq_len
         self.prefetch = prefetch
         self.decomp_workers = decomp_workers
+        self.prefetch_baskets = prefetch_baskets
+        self.readahead_files = readahead_files
         self.seed = seed
         # restart cursor
         self.epoch = 0
@@ -71,6 +77,10 @@ class TokenPipeline:
         self._q: Optional[queue.Queue] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # one shared engine decompresses every shard (repro.io); a 1-deep
+        # file readahead slot decompresses shard i+1 while i's windows flow
+        self._io_engine: Optional[CompressionEngine] = None
+        self._ra_pool: Optional[ThreadPoolExecutor] = None
 
     # -- cursor ----------------------------------------------------------
 
@@ -88,22 +98,54 @@ class TokenPipeline:
     # -- iteration -------------------------------------------------------
 
     def _windows_of_file(self, path: str) -> np.ndarray:
-        toks = BasketFile(path).read_branch("tokens",
-                                            workers=self.decomp_workers)
+        """Decompress one shard through the prefetching reader: all baskets
+        scheduled on the shared engine, joined in entry order (the
+        simultaneous-read-and-decompress hot path)."""
+        if self._stop.is_set():
+            # a straggler producer must not recreate the engine that
+            # _shutdown just closed (it would leak); die quietly instead
+            raise RuntimeError("pipeline closed")
+        if self._io_engine is None:
+            self._io_engine = CompressionEngine(self.decomp_workers)
+        reader = PrefetchReader(BasketFile(path), "tokens",
+                                ahead=self.prefetch_baskets,
+                                engine=self._io_engine)
+        try:
+            toks = reader.read_all()
+        finally:
+            reader.close()
         w = self.seq_len + 1
         n_win = toks.size // w
         return toks[: n_win * w].reshape(n_win, w)
 
     def _producer(self):
+        # local cursor: the consumer concurrently rewrites self.epoch/
+        # file_idx/window_idx to the cursor of each *consumed* batch (the
+        # state to persist), so the producer must never re-read those
+        # attributes mid-run — it snapshots them once at thread start
+        ra: Optional[tuple] = None       # (path, Future[windows]) readahead
+        epoch, file_idx, window_idx = self.epoch, self.file_idx, self.window_idx
         try:
             while not self._stop.is_set():
-                path = self.my_paths[self.file_idx % len(self.my_paths)]
-                wins = self._windows_of_file(path)
+                path = self.my_paths[file_idx % len(self.my_paths)]
+                if ra is not None and ra[0] == path:
+                    wins = ra[1].result()
+                else:
+                    wins = self._windows_of_file(path)
+                ra = None
+                if self.readahead_files and len(self.my_paths) > 1:
+                    nxt = self.my_paths[(file_idx + 1)
+                                        % len(self.my_paths)]
+                    if self._ra_pool is None:
+                        self._ra_pool = ThreadPoolExecutor(
+                            1, thread_name_prefix="repro-io-ra")
+                    ra = (nxt, self._ra_pool.submit(
+                        self._windows_of_file, nxt))
                 # deterministic per-(epoch,file) shuffle of window order
                 rng = np.random.default_rng(
-                    (self.seed, self.epoch, self.file_idx))
+                    (self.seed, epoch, file_idx))
                 order = rng.permutation(len(wins))
-                wi = self.window_idx
+                wi = window_idx
                 while wi + self.batch <= len(wins):
                     if self._stop.is_set():
                         return
@@ -111,14 +153,14 @@ class TokenPipeline:
                     chunk = wins[idx]
                     batch = {"tokens": chunk[:, :-1].astype(np.int32),
                              "targets": chunk[:, 1:].astype(np.int32)}
-                    cursor = {"epoch": self.epoch, "file_idx": self.file_idx,
+                    cursor = {"epoch": epoch, "file_idx": file_idx,
                               "window_idx": wi + self.batch, "seed": self.seed}
                     self._q.put((batch, cursor))
                     wi += self.batch
-                self.window_idx = 0
-                self.file_idx += 1
-                if self.file_idx % len(self.my_paths) == 0:
-                    self.epoch += 1
+                window_idx = 0
+                file_idx += 1
+                if file_idx % len(self.my_paths) == 0:
+                    epoch += 1
         except Exception as e:  # surface reader errors to the consumer
             self._q.put(e)
 
@@ -138,7 +180,18 @@ class TokenPipeline:
             except queue.Empty:
                 pass
             self._thread.join(timeout=5)
+            if self._thread.is_alive():
+                # straggler still decompressing: leave the pools to it
+                # (it exits at the next stop check) rather than closing
+                # an engine that is mid-use
+                return
             self._thread = None
+        if self._ra_pool is not None:
+            self._ra_pool.shutdown(wait=True, cancel_futures=True)
+            self._ra_pool = None
+        if self._io_engine is not None:
+            self._io_engine.close()
+            self._io_engine = None
 
     def __iter__(self) -> Iterator[dict]:
         return self

@@ -1,0 +1,24 @@
+"""repro.io — the parallel I/O engine (DESIGN.md §5).
+
+Basket-granular task parallelism for the compression survey's container:
+
+* :class:`~repro.io.engine.CompressionEngine` — pipelined parallel basket
+  compression with in-order streaming commit and backpressure (ROOT's
+  implicit-MT flush, arXiv:1804.03326);
+* :class:`~repro.io.prefetch.PrefetchReader` — decompress-ahead reads with
+  an LRU decompressed-basket cache (the TTreeCache analogue);
+* :class:`~repro.io.merger.BufferMerger` / ``BasketBuffer`` — multi-producer
+  single-file output without recompression (the TBufferMerger analogue),
+  plus :func:`~repro.io.merger.merge_files` fast file splicing.
+
+``BasketWriter(workers=N)`` / ``BasketFile(prefetch=K)`` in
+``repro.core.bfile`` delegate here, so existing call sites opt in with one
+argument.
+"""
+
+from .engine import CompressionEngine, cpu_count
+from .merger import BasketBuffer, BufferMerger, merge_files
+from .prefetch import PrefetchReader
+
+__all__ = ["CompressionEngine", "cpu_count", "PrefetchReader",
+           "BasketBuffer", "BufferMerger", "merge_files"]

@@ -1,0 +1,275 @@
+"""Pipelined basket-granular compression engine.
+
+ROOT's answer to the single-core compression wall (the paper's closing
+argument, mechanised in *Increasing Parallelism in the ROOT I/O Subsystem*,
+arXiv:1804.03326) is task parallelism at basket granularity: when a TTree
+flushes, each basket becomes an independent compression task and the writer
+commits finished payloads in order.  This module is that mechanism:
+
+* ``CompressionEngine`` owns a bounded worker pool.  ``pack_stream`` takes
+  the (entry_start, entry_count, raw_bytes) chunk stream produced by
+  :func:`repro.core.basket.split_array`, compresses up to ``max_inflight``
+  baskets concurrently, and yields ``(start, count, payload, meta)``
+  strictly in submission order — so the caller writes at monotonically
+  increasing offsets exactly like the serial path, and the output file is
+  **byte-identical** to serial output (``pack_basket`` is deterministic and
+  commit order equals submission order).
+
+* Backpressure: the submitting side blocks once ``max_inflight`` baskets
+  are in flight, bounding memory at ~``max_inflight * basket_bytes``
+  regardless of branch size — a slow disk never lets the compressors run
+  unboundedly ahead.
+
+* GIL routing: C-backed codecs (zlib, lzma, libzstd) release the GIL while
+  compressing, so a thread pool scales them across cores.  The from-scratch
+  pure-Python codecs (our lz4 block format and the repro-deflate family)
+  hold the GIL; for those the engine transparently uses a process pool —
+  tasks carry only (bytes, config fields), so they pickle cheaply and the
+  payloads come back bit-identical.  ``benchmarks/fig_parallel.py`` shows
+  both regimes as the paper-style cores-vs-throughput curve.
+
+The engine is shared: one instance can serve many branches, many writers,
+and the prefetching reader (``repro.io.prefetch``) simultaneously.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import sys
+import threading
+import time
+from collections import deque
+from concurrent.futures import Executor, Future, ProcessPoolExecutor, ThreadPoolExecutor
+from typing import Iterable, Iterator, Optional
+
+from repro.core import basket as _basket
+from repro.core import codec as _codec
+
+__all__ = ["CompressionEngine", "cpu_count"]
+
+
+def cpu_count() -> int:
+    return os.cpu_count() or 1
+
+
+# ---------------------------------------------------------------------------
+# module-level task bodies (picklable, so the process backend can run them)
+# ---------------------------------------------------------------------------
+
+def _pack_task(raw: bytes, cfg_fields: tuple, start: int, count: int):
+    cfg = _codec.CompressionConfig(*cfg_fields)
+    payload, meta = _basket.pack_basket(raw, cfg, entry_start=start,
+                                        entry_count=count)
+    return start, count, payload, meta
+
+
+def _unpack_task(path: str, offset: int, meta_json: dict,
+                 dictionary: Optional[bytes], verify: bool) -> bytes:
+    meta = _basket.BasketMeta.from_json(meta_json)
+    with open(path, "rb") as f:
+        f.seek(offset)
+        payload = f.read(meta.comp_len)
+    return _basket.unpack_basket(payload, meta, dictionary, verify=verify)
+
+
+def _cfg_fields(cfg: _codec.CompressionConfig) -> tuple:
+    return (cfg.algo, cfg.level, cfg.precond, cfg.dictionary)
+
+
+def _warm_task(delay: float = 0.0):
+    if delay:
+        time.sleep(delay)
+    return None
+
+
+_SENTINEL = object()
+
+# __main__.__spec__/__file__ are process-global: the hide/spawn/restore
+# window below must be exclusive across ALL engines, not just one
+_SPAWN_LOCK = threading.Lock()
+
+
+def _restore_attr(obj, name, saved) -> None:
+    if saved is _SENTINEL:
+        try:
+            delattr(obj, name)
+        except AttributeError:
+            pass
+    else:
+        setattr(obj, name, saved)
+
+
+class CompressionEngine:
+    """Bounded worker pool with in-order streaming commit.
+
+    ``workers=0`` degrades to fully serial execution (no pool, no threads),
+    which is what makes ``BasketWriter(workers=0)`` bit-for-bit the old
+    serial writer with zero overhead.
+    """
+
+    def __init__(self, workers: int = 0, max_inflight: Optional[int] = None,
+                 unpack_processes: bool = False):
+        self.workers = max(int(workers), 0)
+        self.max_inflight = max_inflight or max(2 * self.workers, 1)
+        # Decompression defaults to the thread pool even for pure-Python
+        # codecs: readers are created ad hoc (one per file/branch), and a
+        # process pool's worker-import cost would dwarf the decode work.
+        # Long steady-state scans can opt in to process decompression.
+        self.unpack_processes = unpack_processes
+        self._thread_pool: Optional[ThreadPoolExecutor] = None
+        self._proc_pool: Optional[ProcessPoolExecutor] = None
+        self._lock = threading.Lock()
+        self._closed = False
+
+    # -- pools -----------------------------------------------------------
+
+    def _pool_for(self, algo: str) -> Optional[Executor]:
+        """Thread pool for GIL-releasing codecs, process pool otherwise."""
+        if self.workers == 0:
+            return None
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            if _codec.is_pure_python(algo):
+                if self._proc_pool is None:
+                    self._proc_pool = self._spawn_process_pool()
+                return self._proc_pool
+            if self._thread_pool is None:
+                self._thread_pool = ThreadPoolExecutor(
+                    self.workers, thread_name_prefix="repro-io")
+            return self._thread_pool
+
+    def _spawn_process_pool(self) -> ProcessPoolExecutor:
+        """Pool for GIL-holding codecs, started so it can never run user
+        code or deadlock:
+
+        * *forkserver* context — workers fork from a clean server process,
+          never from this (possibly jax-threaded) one, so no lock held by a
+          sibling thread can deadlock a child (plain ``fork`` can);
+        * every worker is spawned HERE with ``__main__``'s ``__spec__``/
+          ``__file__`` temporarily hidden.  forkserver (like spawn)
+          otherwise re-imports ``__main__`` per worker, which re-executes
+          unguarded user scripts (hanging the pool on the re-entrant
+          ``ProcessPoolExecutor``) and crashes outright for stdin scripts
+          (``python - <<EOF``: ``__file__`` doesn't exist on disk).  Our
+          tasks are module-level functions in this module — workers never
+          need ``__main__`` at all, so a bare one is correct.
+        """
+        try:
+            ctx = mp.get_context("forkserver")
+        except ValueError:  # pragma: no cover - non-POSIX
+            ctx = None
+        with _SPAWN_LOCK:
+            main = sys.modules.get("__main__")
+            saved_spec = getattr(main, "__spec__", _SENTINEL) if main else _SENTINEL
+            saved_file = getattr(main, "__file__", _SENTINEL) if main else _SENTINEL
+            try:
+                if main is not None:
+                    main.__spec__ = None
+                    main.__file__ = None
+                pool = ProcessPoolExecutor(self.workers, mp_context=ctx)
+                # submit() is what forks workers; preparation data (incl.
+                # the hidden __main__ info) is captured synchronously per
+                # spawn, so all workers must spawn inside this window
+                futs = [pool.submit(_warm_task, 0.05)
+                        for _ in range(self.workers)]
+            finally:
+                if main is not None:
+                    _restore_attr(main, "__spec__", saved_spec)
+                    _restore_attr(main, "__file__", saved_file)
+        for f in futs:
+            f.result()
+        return pool
+
+    def warmup(self, algo: str = "zlib") -> None:
+        """Pre-start the pool serving ``algo`` (process pools fork lazily;
+        benchmarks warm up so curves show steady-state throughput).  The
+        warm tasks sleep briefly so one eager worker can't drain them all —
+        every worker must spawn (and pay its module import) now."""
+        pool = self._pool_for(algo)
+        if pool is not None:
+            delay = 0.25 if isinstance(pool, ProcessPoolExecutor) else 0.0
+            for f in [pool.submit(_warm_task, delay)
+                      for _ in range(self.workers)]:
+                f.result()
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            pools = [p for p in (self._thread_pool, self._proc_pool) if p]
+            self._thread_pool = self._proc_pool = None
+        for p in pools:
+            p.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()
+
+    # -- ordered map (the pipeline primitive) ----------------------------
+
+    def _map_ordered(self, pool: Optional[Executor], submit_one,
+                     items: Iterable) -> Iterator:
+        """Yield results in submission order, ≤ max_inflight in flight.
+
+        The deque head is the oldest future; blocking on it while the tail
+        keeps compressing is what pipelines compression with the caller's
+        sequential disk writes."""
+        if pool is None:
+            for it in items:
+                yield submit_one(None, it)
+            return
+        pending: deque[Future] = deque()
+        it = iter(items)
+        exhausted = False
+        try:
+            while pending or not exhausted:
+                while not exhausted and len(pending) < self.max_inflight:
+                    try:
+                        item = next(it)
+                    except StopIteration:
+                        exhausted = True
+                        break
+                    pending.append(submit_one(pool, item))
+                if pending:
+                    yield pending.popleft().result()
+        finally:
+            for f in pending:
+                f.cancel()
+
+    # -- compression side ------------------------------------------------
+
+    def pack_stream(self, chunks: Iterable[tuple[int, int, bytes]],
+                    cfg: _codec.CompressionConfig) -> Iterator[tuple]:
+        """(start, count, raw) stream -> (start, count, payload, meta)
+        stream, in order, compressed ``workers``-wide."""
+        pool = self._pool_for(cfg.algo if cfg.enabled else "none")
+        fields = _cfg_fields(cfg)
+
+        def submit_one(p, chunk):
+            start, count, raw = chunk
+            if p is None:
+                return _pack_task(raw, fields, start, count)
+            return p.submit(_pack_task, raw, fields, start, count)
+
+        return self._map_ordered(pool, submit_one, chunks)
+
+    # -- decompression side (used by the prefetching reader) -------------
+
+    def submit_unpack(self, path: str, offset: int, meta_json: dict,
+                      dictionary: Optional[bytes], verify: bool) -> Future:
+        """Schedule one basket's read+decompress; returns a Future[bytes]."""
+        algo = meta_json.get("algo", "none") if self.unpack_processes else "none"
+        pool = self._pool_for(algo)
+        if pool is None:
+            f: Future = Future()
+            try:
+                f.set_result(_unpack_task(path, offset, meta_json,
+                                          dictionary, verify))
+            except Exception as e:  # mirror executor semantics
+                f.set_exception(e)
+            return f
+        return pool.submit(_unpack_task, path, offset, meta_json,
+                           dictionary, verify)

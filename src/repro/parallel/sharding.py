@@ -28,8 +28,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.specs import ParamSpec, map_logical, tree_paths
 
-__all__ = ["ParallelismConfig", "logical_to_pspec", "param_shardings",
-           "batch_shardings", "cache_shardings", "opt_shardings"]
+__all__ = ["ParallelismConfig", "abstract_mesh", "logical_to_pspec",
+           "param_shardings", "batch_shardings", "cache_shardings",
+           "opt_shardings"]
+
+
+def abstract_mesh(axis_sizes, axis_names) -> "jax.sharding.AbstractMesh":
+    """Version-portable AbstractMesh: newer jax takes (sizes, names), jax
+    0.4.x takes a tuple of (name, size) pairs.  Rules only read mesh shape,
+    so an abstract mesh is all the engine ever needs."""
+    AM = jax.sharding.AbstractMesh
+    try:
+        return AM(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AM(tuple(zip(axis_names, axis_sizes)))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,43 @@
+"""Drop-in stand-ins for ``hypothesis`` so property-based tests *skip*
+cleanly (instead of aborting collection) when the package is absent.
+
+Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_fallback import given, settings, st
+
+``@given(...)`` replaces the test with a zero-argument skipper, so pytest
+never tries to resolve the strategy parameters as fixtures; ``settings``
+and the ``st`` strategy namespace are inert no-ops.
+"""
+
+import pytest
+
+
+class _InertStrategies:
+    def __getattr__(self, name):
+        def _strategy(*args, **kwargs):
+            return None
+        _strategy.__name__ = name
+        return _strategy
+
+
+st = _InertStrategies()
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        def skipper():
+            pytest.skip("hypothesis not installed")
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        return skipper
+    return deco

@@ -5,7 +5,11 @@ import zlib
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip; the rest still run
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.checksum import (adler32_naive, adler32_vector, adler32_hw,
                                  crc32_naive, crc32_table, crc32_slice8,

@@ -1,0 +1,211 @@
+"""Parallel I/O engine (repro.io): byte-identity of parallel writes,
+multi-producer merging, decompress-ahead reads, crash atomicity."""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core import CompressionConfig
+from repro.core.bfile import BasketFile, BasketWriter, write_arrays
+from repro.data import TokenPipeline, write_token_shards
+from repro.io import (BasketBuffer, BufferMerger, CompressionEngine,
+                      PrefetchReader, merge_files)
+
+
+@pytest.fixture
+def arrays(rng):
+    return {
+        "f": rng.standard_normal(100_000).astype(np.float32),
+        "off": np.cumsum(rng.integers(1, 7, 100_000)).astype(np.int64),
+    }
+
+
+def _cfg(name, arr):
+    return CompressionConfig("zlib", 5, "shuffle4")
+
+
+def test_parallel_write_byte_identical(tmp_path, arrays):
+    """workers=1 and workers=8 must produce the same bytes as serial."""
+    paths = {}
+    for w in (0, 1, 8):
+        p = str(tmp_path / f"w{w}.bskt")
+        write_arrays(p, arrays, _cfg, target_basket_bytes=32 * 1024, workers=w)
+        paths[w] = open(p, "rb").read()
+    assert paths[0] == paths[1] == paths[8]
+    assert len(BasketFile(str(tmp_path / "w8.bskt")).branches["f"]["baskets"]) > 1
+
+
+def test_parallel_write_pure_python_codec_byte_identical(tmp_path, rng):
+    """Pure-Python codecs route to the process pool; bytes still identical."""
+    arr = {"x": rng.standard_normal(20_000).astype(np.float32)}
+    cfg = lambda n, a: CompressionConfig("lz4", 1, "shuffle4")
+    a = str(tmp_path / "a.bskt")
+    b = str(tmp_path / "b.bskt")
+    write_arrays(a, arr, cfg, target_basket_bytes=16 * 1024, workers=0)
+    write_arrays(b, arr, cfg, target_basket_bytes=16 * 1024, workers=4)
+    assert open(a, "rb").read() == open(b, "rb").read()
+
+
+def test_engine_shared_across_branches(tmp_path, arrays):
+    with CompressionEngine(workers=4) as eng:
+        with BasketWriter(str(tmp_path / "e.bskt"), engine=eng) as w:
+            for name, arr in arrays.items():
+                w.write_branch(name, arr, _cfg(name, arr), 32 * 1024)
+    f = BasketFile(str(tmp_path / "e.bskt"))
+    for name, arr in arrays.items():
+        np.testing.assert_array_equal(f.read_branch(name), arr)
+
+
+def test_merger_multi_producer_roundtrip(tmp_path, rng):
+    base = rng.standard_normal(50_000).astype(np.float32)
+    path = str(tmp_path / "m.bskt")
+    with BufferMerger(path, workers=2) as m:
+        def produce(k):
+            buf = m.buffer()
+            buf.write_branch(f"shard{k}", base + k,
+                             CompressionConfig("zlib", 3), 32 * 1024)
+            m.merge(buf)
+        threads = [threading.Thread(target=produce, args=(k,))
+                   for k in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    f = BasketFile(path)
+    assert len(f.branch_names()) == 6
+    for k in range(6):
+        np.testing.assert_array_equal(f.read_branch(f"shard{k}"), base + k)
+
+
+def test_merger_no_recompression_preserves_payloads(tmp_path, arrays):
+    """Merged payload bytes equal the buffered (pre-compressed) ones."""
+    path = str(tmp_path / "nr.bskt")
+    buf = BasketBuffer()
+    buf.write_branch("f", arrays["f"], _cfg("f", None), 32 * 1024)
+    payloads = list(buf._payloads["f"])
+    with BufferMerger(path) as m:
+        m.merge(buf, clear=False)
+    f = BasketFile(path)
+    got = [f.read_basket_payload("f", i)
+           for i in range(len(f.branches["f"]["baskets"]))]
+    assert got == payloads
+
+
+def test_merge_files_splices_without_recompression(tmp_path, arrays, rng):
+    p1, p2 = str(tmp_path / "1.bskt"), str(tmp_path / "2.bskt")
+    write_arrays(p1, {"a": arrays["f"]}, _cfg, target_basket_bytes=32 * 1024)
+    write_arrays(p2, {"b": arrays["off"]}, _cfg, target_basket_bytes=32 * 1024)
+    out = str(tmp_path / "merged.bskt")
+    merge_files(out, [p1, p2])
+    f = BasketFile(out)
+    np.testing.assert_array_equal(f.read_branch("a"), arrays["f"])
+    np.testing.assert_array_equal(f.read_branch("b"), arrays["off"])
+    assert f.compressed_bytes() == (BasketFile(p1).compressed_bytes()
+                                    + BasketFile(p2).compressed_bytes())
+
+
+def test_prefetch_reader_matches_eager(tmp_path, arrays):
+    p = str(tmp_path / "p.bskt")
+    write_arrays(p, arrays, _cfg, target_basket_bytes=16 * 1024)
+    f = BasketFile(p)
+    with PrefetchReader(f, "f", workers=4, ahead=3) as r:
+        assert r.n_baskets() > 2
+        np.testing.assert_array_equal(r.read_all(), arrays["f"])
+        np.testing.assert_array_equal(r.read_entries(100, 5000),
+                                      arrays["f"][100:5000])
+        np.testing.assert_array_equal(r.read_entries(0, 1), arrays["f"][:1])
+        assert r.read_entries(10, 10).size == 0
+
+
+def test_read_all_decompresses_each_basket_once(tmp_path, arrays):
+    """LRU eviction must never force re-decompression of baskets whose
+    futures are already held for consumption (cache smaller than branch)."""
+    p = str(tmp_path / "once.bskt")
+    write_arrays(p, arrays, _cfg, target_basket_bytes=16 * 1024)
+    with PrefetchReader(BasketFile(p), "f", workers=4, ahead=2,
+                        cache_baskets=2) as r:
+        np.testing.assert_array_equal(r.read_all(), arrays["f"])
+        assert r.misses == r.n_baskets()    # each basket scheduled once
+        assert r.hits == 0
+        # bulk reads must not pin the whole decompressed branch
+        assert len(r._cache) <= 2
+
+
+def test_prefetch_cache_hits_on_rereads(tmp_path, arrays):
+    p = str(tmp_path / "c.bskt")
+    write_arrays(p, arrays, _cfg, target_basket_bytes=16 * 1024)
+    with PrefetchReader(BasketFile(p), "off", workers=2, ahead=2) as r:
+        r.read_entries(0, 4000)
+        before = r.hits
+        r.read_entries(0, 4000)      # same covering baskets -> LRU hits
+        assert r.hits > before
+
+
+def test_basketfile_prefetch_argument(tmp_path, arrays):
+    p = str(tmp_path / "bf.bskt")
+    write_arrays(p, arrays, _cfg, target_basket_bytes=16 * 1024)
+    with BasketFile(p, workers=4, prefetch=3) as f:
+        np.testing.assert_array_equal(f.read_branch("f"), arrays["f"])
+        np.testing.assert_array_equal(f.read_entries("off", 777, 9999),
+                                      arrays["off"][777:9999])
+
+
+def test_crash_mid_write_leaves_no_valid_trailer(tmp_path, arrays):
+    """A writer that dies mid-write (even after whole branches) must not
+    leave anything a reader would accept — parallel path included."""
+    p = str(tmp_path / "crash.bskt")
+    w = BasketWriter(p, workers=4)
+    w.write_branch("f", arrays["f"], _cfg("f", None), 32 * 1024)
+    # crash point: branch data flushed to tmp, no close() -> no rename
+    w._f.flush()
+    assert not os.path.exists(p)
+    torn = open(w._tmp, "rb").read()
+    w.abort()
+    assert not os.path.exists(w._tmp)
+    # even a torn copy promoted to the final name is rejected (no trailer)
+    open(p, "wb").write(torn)
+    with pytest.raises(ValueError, match="truncated|magic"):
+        BasketFile(p)
+
+
+def test_merger_abort_is_atomic(tmp_path, arrays):
+    p = str(tmp_path / "ab.bskt")
+    m = BufferMerger(p)
+    buf = m.buffer()
+    buf.write_branch("f", arrays["f"], _cfg("f", None), 32 * 1024)
+    m.merge(buf)
+    m.abort()
+    assert not os.path.exists(p)
+    assert not os.path.exists(p + ".tmp")
+
+
+def test_checkpoint_parallel_producers_roundtrip(tmp_path, rng):
+    tree = {"w": {"a": rng.standard_normal((64, 32)).astype(np.float32),
+                  "b": rng.integers(0, 9, 1000).astype(np.int32)},
+            "step": np.int64(7), "none": None}
+    ps = str(tmp_path / "serial.bskt")
+    pp = str(tmp_path / "parallel.bskt")
+    save_pytree(ps, tree)
+    save_pytree(pp, tree, workers=2, producers=3)
+    serial, _ = load_pytree(ps)
+    parallel, _ = load_pytree(pp, prefetch=2)
+    assert set(serial) == set(parallel)
+    for k in serial:
+        np.testing.assert_array_equal(serial[k], parallel[k])
+
+
+def test_pipeline_readahead_matches_eager(tmp_path):
+    shards = [str(tmp_path / f"s{i}.bskt") for i in range(2)]
+    write_token_shards(shards, vocab=1000, tokens_per_shard=40_000, seed=3)
+    def collect(**kw):
+        pipe = TokenPipeline(shards, batch=4, seq_len=128, **kw)
+        out = [next(pipe)["tokens"].copy() for _ in range(20)]
+        pipe.close()
+        return out
+    eager = collect(readahead_files=0, decomp_workers=0, prefetch_baskets=0)
+    ahead = collect(readahead_files=1, decomp_workers=4, prefetch_baskets=4)
+    for a, b in zip(eager, ahead):
+        np.testing.assert_array_equal(a, b)

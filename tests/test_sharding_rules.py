@@ -9,13 +9,13 @@ from repro.configs import get_config, reduced
 from repro.models import Model
 from repro.models.specs import ParamSpec
 from repro.parallel import ParallelismConfig, logical_to_pspec
-from repro.parallel.sharding import dp_spec
+from repro.parallel.sharding import abstract_mesh, dp_spec
 
 
 @pytest.fixture(scope="module")
 def mesh():
     # single real device is fine: rules only read mesh SHAPE
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_tp_divisible_dims_shard(mesh):
@@ -65,9 +65,9 @@ def test_each_mesh_axis_used_once(mesh):
 
 
 def test_dp_spec_divisibility():
-    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert dp_spec(mesh, 256) == ("pod", "data")
     assert dp_spec(mesh, 1) is None
     assert dp_spec(mesh, 13) is None
-    single = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    single = abstract_mesh((16, 16), ("data", "model"))
     assert dp_spec(single, 128) == "data"
