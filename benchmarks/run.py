@@ -1,18 +1,26 @@
 """Benchmark harness entry point: one module per paper figure/table.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,fig6,...]
+                                            [--json artifacts/bench/BENCH.json]
 
-Outputs CSV per benchmark (stdout + artifacts/bench/*.csv).
+Outputs CSV per benchmark (stdout + artifacts/bench/*.csv).  ``--json``
+additionally writes one machine-readable perf-trajectory file with every
+row from every benchmark that ran — future PRs diff their numbers against
+it (e.g. ``artifacts/bench/BENCH_pr2.json`` carries this PR's codec-core
+speedups).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
 import time
 
 from . import (fig2_survey, fig3_decompression, fig45_cfzlib, fig6_precond,
-               fig_dict, fig_parallel, pipeline_tput, roofline)
+               fig_dict, fig_entropy, fig_parallel, pipeline_tput, roofline)
 
 BENCHES = {
     "fig2": fig2_survey,
@@ -20,6 +28,7 @@ BENCHES = {
     "fig45": fig45_cfzlib,
     "fig6": fig6_precond,
     "fig_dict": fig_dict,
+    "fig_entropy": fig_entropy,
     "fig_parallel": fig_parallel,
     "pipeline": pipeline_tput,
     "roofline": roofline,
@@ -30,21 +39,38 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset of " + ",".join(BENCHES))
+    ap.add_argument("--json", default="",
+                    help="write all rows from all benches to this JSON file "
+                         "(perf trajectory for cross-PR comparison)")
     args = ap.parse_args(argv)
     names = [n for n in args.only.split(",") if n] or list(BENCHES)
     rc = 0
+    collected: dict[str, list[dict]] = {}
     for name in names:
         mod = BENCHES[name]
         print(f"\n===== {name} =====", flush=True)
         t0 = time.monotonic()
         try:
-            mod.run(f"artifacts/bench/{name}.csv")
+            rows = mod.run(f"artifacts/bench/{name}.csv")
+            collected[name] = rows or []
         except Exception as e:  # keep the harness going; report at the end
             print(f"BENCH {name} FAILED: {e!r}")
             import traceback
             traceback.print_exc()
             rc = 1
         print(f"===== {name} done in {time.monotonic()-t0:.1f}s =====")
+    if args.json:
+        payload = {
+            "schema": 1,
+            "unix_time": time.time(),
+            "platform": platform.platform(),
+            "python": sys.version.split()[0],
+            "benches": collected,
+        }
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json} ({sum(len(v) for v in collected.values())} rows)")
     return rc
 
 

@@ -11,7 +11,12 @@ maps that onto its native knob:
                (so level 9 ~ zstd 19, the practical max)
 ``zstd-fast``  libzstd negative levels (-1..-9): the C-speed stand-in
                for LZ4-class operating points (see DESIGN.md §4)
-``lzma``       stdlib lzma, preset = level
+``lzma``       stdlib lzma, preset = level; **no dictionary support** —
+               FORMAT_XZ has no zdict-style preset-dictionary hook, so
+               *compressing* with a dictionary raises ``ValueError``
+               rather than silently dropping it (decompression tolerates
+               one: files written before this check are plain XZ streams
+               and must stay readable)
 ``repro-deflate``  from-scratch LZ77+Huffman with triplet/quadruplet
                hashing (CF-ZLIB's levels-1–5 mechanism, measurable)
 ``none``       identity (level 0 semantics for every codec)
@@ -19,8 +24,8 @@ maps that onto its native knob:
 
 Dictionaries (paper §2.3): ``CompressionConfig.dictionary`` carries trained
 dictionary bytes.  zstd uses them natively; zlib via ``zdict``; lz4 via
-prefix priming (dictionary prepended to the window).  See
-``repro.core.dictionary`` for training.
+prefix priming (dictionary prepended to the window); lzma rejects them
+(see the table above).  See ``repro.core.dictionary`` for training.
 """
 
 from __future__ import annotations
@@ -110,10 +115,18 @@ def _zstd_fast_c(data: bytes, level: int, d: Optional[bytes]) -> bytes:
 # ---------------------------------------------------------------------------
 
 def _lzma_c(data: bytes, level: int, d: Optional[bytes]) -> bytes:
+    if d:
+        raise ValueError(
+            "lzma codec does not support trained dictionaries "
+            "(FORMAT_XZ has no preset-dictionary mechanism); "
+            "use zstd/zlib/lz4 or drop the dictionary")
     return lzma.compress(data, format=lzma.FORMAT_XZ, preset=level)
 
 
 def _lzma_d(comp: bytes, orig_len: int, d: Optional[bytes]) -> bytes:
+    # decompress tolerates a configured dictionary: files written before
+    # compression started rejecting it are plain XZ streams (the dict was
+    # never used) and must stay readable
     return lzma.decompress(comp, format=lzma.FORMAT_XZ)
 
 

@@ -1,4 +1,4 @@
-"""From-scratch LZ4 *block format* codec (paper §2.2).
+"""From-scratch LZ4 *block format* codec (paper §2.2) — vectorized cores.
 
 The real ``lz4`` bindings are not available offline, so this implements the
 LZ4 block wire format (https://github.com/lz4/lz4 — lz4_Block_format.md)
@@ -14,42 +14,62 @@ independently:
 Two compressors, mirroring the reference library:
 
 * ``level <= 3`` — **fast/greedy**: single-probe hash table (the reference
-  LZ4 fast path) with an acceleration skip on incompressible stretches.
+  LZ4 fast path), with candidate positions probed in vectorized chunks —
+  ``table[hashes[i:i+K]]`` is compared against the precomputed 4-byte
+  words of a whole chunk at once, the first accepted match resolved, and
+  the scan jumps past it (the paper's SIMD quadruplet-hashing mechanism
+  applied to the probe loop itself, not just the hash precompute).
 * ``level >= 4`` — **HC-ish**: chained hash search; chain depth grows with
   level ("LZ4-HC typically results in ~20% better ratio", paper §2.2).
 
-The matcher hashes 4-byte windows ("quadruplets" — the same granularity the
-paper highlights for CF-ZLIB's fast levels) with hashes precomputed for the
-whole buffer in one vectorized numpy pass — the SIMD-hashing analogue.
+``decompress_block`` is two-pass: pass 1 parses every sequence header into
+numpy ``(litstart, litlen, offset, mlen)`` arrays in one cheap scan (token
+positions only; extension bytes are rare and patched sparsely), pass 2
+derives all output positions from one cumulative sum, scatters every
+literal run with a single vectorized gather, and replays matches as plain
+slice memcpys.  The pre-vectorization serial decoder is kept as
+``_decompress_block_legacy`` — it is the baseline ``benchmarks/
+fig_entropy.py`` and the CI perf-smoke compare against.
 
-Pure-Python sequence loops bound absolute MB/s; benchmarks report this
-handicap explicitly (EXPERIMENTS.md §Fidelity) and use C-backed zstd
-negative levels as the native-speed LZ4-class proxy.
+The numpy cores lift throughput well above the old per-sequence Python
+loops (see ``benchmarks/fig_entropy.py`` for current numbers), but this is
+still interpreter-orchestrated numpy, not native code: absolute MB/s
+remains far below C lz4, so benchmarks keep reporting the handicap
+explicitly (EXPERIMENTS.md §Fidelity) and use C-backed zstd negative
+levels as the native-speed LZ4-class proxy.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from . import tokexec as _tok
+
 __all__ = ["compress_block", "decompress_block"]
 
 _MIN_MATCH = 4
 _MFLIMIT = 12      # last match must end this many bytes before block end
 _LAST_LITERALS = 5
+_PROBE_CHUNK = 64  # greedy fast path: candidate positions probed per batch
 
 
-def _hash_all(data: np.ndarray, log2_size: int) -> np.ndarray:
-    """Vectorized 4-byte-window multiplicative hash for every position."""
+def _words4(data: np.ndarray) -> np.ndarray:
+    """Little-endian 4-byte window ("quadruplet") at every position."""
     n = data.size
     if n < 4:
         return np.zeros(0, dtype=np.uint32)
-    w = (
+    return (
         data[: n - 3].astype(np.uint32)
         | (data[1: n - 2].astype(np.uint32) << 8)
         | (data[2: n - 1].astype(np.uint32) << 16)
         | (data[3:].astype(np.uint32) << 24)
     )
-    return ((w * np.uint32(2654435761)) >> np.uint32(32 - log2_size)).astype(np.uint32)
+
+
+def _hash_words(words: np.ndarray, log2_size: int) -> np.ndarray:
+    """Vectorized multiplicative hash of precomputed 4-byte windows."""
+    return ((words * np.uint32(2654435761))
+            >> np.uint32(32 - log2_size)).astype(np.uint32)
 
 
 def _match_len(a: np.ndarray, i: int, j: int, limit: int) -> int:
@@ -118,34 +138,53 @@ def compress_block(data: bytes, level: int = 1, dict_prefix: bytes = b"") -> byt
         return bytes(out)
 
     log2_size = 14 if level <= 3 else 16
-    hashes = _hash_all(src, log2_size)
+    words = _words4(src)
+    hashes = _hash_words(words, log2_size)
     match_limit = n - _LAST_LITERALS
     scan_limit = n - _MFLIMIT
 
     if level <= 3:
-        # ---- greedy fast path: single-slot hash table + acceleration skip
+        # ---- greedy fast path: single-slot hash table, batched probing.
+        # Probe _PROBE_CHUNK candidate positions per step: one gather pulls
+        # all their table slots, one compare accepts/rejects every quadruplet
+        # at once, and only an accepted match drops back to scalar code.
+        # The table is only refreshed per chunk, which would go blind to
+        # matches closer than the chunk (runs, byte-plane periodicity), so a
+        # one-pass periodic-candidate table covers distances 1..4.
+        near = np.zeros(hashes.size, dtype=np.uint8)
+        for delta in (4, 3, 2, 1):  # smallest period wins (longest extension)
+            eq = words[delta:] == words[:-delta]
+            near[delta:][eq] = delta
         table = np.full(1 << log2_size, -1, dtype=np.int64)
-        for j in range(0, min(plen, hashes.size)):   # seed with dictionary
-            table[hashes[j]] = j
+        seed = min(plen, hashes.size)
+        if seed:  # dictionary prefix; duplicate hashes keep the last (newest)
+            table[hashes[:seed]] = np.arange(seed)
         anchor = plen
         i = plen
-        searches = 0
-        accel_shift = 6  # reference LZ4: skip grows after misses
         while i < scan_limit:
-            h = hashes[i]
-            cand = table[h]
-            table[h] = i
-            if cand >= 0 and i - cand <= 65535 and src[cand] == src[i] and \
-                    np.array_equal(src[cand:cand + 4], src[i:i + 4]):
-                mlen = _match_len(src, i, cand, match_limit)
-                if mlen >= _MIN_MATCH:
-                    emit(anchor, i, mlen, i - cand)
-                    i += mlen
-                    anchor = i
-                    searches = 0
-                    continue
-            searches += 1
-            i += 1 + (searches >> accel_shift)
+            end = min(i + _PROBE_CHUNK, scan_limit)
+            pos = np.arange(i, end, dtype=np.int64)
+            hs = hashes[i:end]
+            cands = table[hs]
+            nd = near[i:end]
+            # cands == -1 gathers words[-1]: in-bounds garbage, masked below
+            ok = (nd > 0) | ((cands >= 0) & (pos - cands <= 65535)
+                             & (words[cands] == words[pos]))
+            hits = np.flatnonzero(ok)
+            if hits.size == 0:
+                table[hs] = pos
+                i = end
+                continue
+            j = int(hits[0])
+            table[hs[:j + 1]] = pos[:j + 1]
+            ii = i + j
+            cand = ii - int(nd[j]) if nd[j] else int(cands[j])
+            # quadruplet equality guarantees >= _MIN_MATCH here: scan stops
+            # _MFLIMIT before the end, so ii+4 is always under match_limit
+            mlen = _match_len(src, ii, cand, match_limit)
+            emit(anchor, ii, mlen, ii - cand)
+            i = ii + mlen
+            anchor = i
     else:
         # ---- HC path: chained hash search, depth scales with level
         depth = {4: 4, 5: 8, 6: 16, 7: 32, 8: 64, 9: 128}.get(min(level, 9), 16)
@@ -190,10 +229,21 @@ def compress_block(data: bytes, level: int = 1, dict_prefix: bytes = b"") -> byt
 
 
 def decompress_block(comp: bytes, orig_len: int, dict_prefix: bytes = b"") -> bytes:
-    """Decompress an LZ4 block of known decompressed size.
+    """Decompress an LZ4 block of known decompressed size (two-pass,
+    vectorized — see ``repro.core.tokexec``).
 
     ``dict_prefix`` must be the same window-priming dictionary used at
     compression time (matches may reference into it)."""
+    prefix = dict_prefix[-65535:] if dict_prefix else b""
+    return _tok.decode_token_stream(comp, prefix, orig_len, base=0,
+                                    offset_bytes=2, name="LZ4 block")
+
+
+def _decompress_block_legacy(comp: bytes, orig_len: int,
+                             dict_prefix: bytes = b"") -> bytes:
+    """The pre-vectorization single-pass serial decoder, kept verbatim as
+    the perf baseline for ``benchmarks/fig_entropy.py`` and as a cross-check
+    oracle in tests."""
     prefix = dict_prefix[-65535:] if dict_prefix else b""
     plen = len(prefix)
     src = comp

@@ -37,6 +37,7 @@ from __future__ import annotations
 import numpy as np
 
 from . import huffman
+from . import tokexec as _tok
 
 __all__ = ["compress", "decompress", "lz77_tokens"]
 
@@ -185,49 +186,12 @@ def lz77_tokens(data: bytes, level: int = 5, mode: str = "cf",
 
 
 def _untokenize(tokens: bytes, dict_prefix: bytes = b"") -> bytes:
+    """Two-pass vectorized token decode (repro.core.tokexec): parse all
+    sequence headers into numpy arrays in one scan, then place literals and
+    replay matches from a cumulative output-position table."""
     orig_len = int.from_bytes(tokens[:4], "little")
-    plen = len(dict_prefix)
-    dst = bytearray(dict_prefix)
-    i = 4
-    n = len(tokens)
-    target = orig_len + plen
-    while i < n and len(dst) < target:
-        token = tokens[i]
-        i += 1
-        litlen = token >> 4
-        if litlen == 15:
-            while True:
-                b = tokens[i]
-                i += 1
-                litlen += b
-                if b != 255:
-                    break
-        if litlen:
-            dst += tokens[i: i + litlen]
-            i += litlen
-        if i >= n:
-            break
-        dist = int.from_bytes(tokens[i: i + 3], "little")
-        i += 3
-        mlen = (token & 0xF) + _MIN_MATCH
-        if (token & 0xF) == 15:
-            while True:
-                b = tokens[i]
-                i += 1
-                mlen += b
-                if b != 255:
-                    break
-        ref = len(dst) - dist
-        if dist >= mlen:
-            dst += dst[ref: ref + mlen]
-        else:
-            while mlen > 0:
-                chunk = min(mlen, len(dst) - ref)
-                dst += dst[ref: ref + chunk]
-                mlen -= chunk
-    if len(dst) - plen != orig_len:
-        raise ValueError(f"repro_deflate decoded {len(dst)-plen}, expected {orig_len}")
-    return bytes(dst[plen:])
+    return _tok.decode_token_stream(tokens, dict_prefix, orig_len, base=4,
+                                    offset_bytes=3, name="repro_deflate")
 
 
 def compress(data: bytes, level: int = 5, mode: str = "cf",

@@ -1,0 +1,33 @@
+"""Deterministic payloads shared by the golden-blob generator and the
+golden-format regression tests (tests/test_vectorized_codecs.py).
+
+The blobs under tests/golden/ were written by the PRE-vectorization codecs
+(PR 1 tree); these payload definitions must never change, or the stored
+blobs stop corresponding to them.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def payloads() -> dict[str, bytes]:
+    rng = np.random.default_rng(20260730)
+    text = bytes(rng.integers(97, 105, 40_000, dtype=np.uint8))
+    offsets = (0x01000000 + np.cumsum(rng.integers(1, 5, 8_000))).astype(">u4")
+    return {
+        "empty": b"",
+        "one": b"R",
+        "tiny": b"ROOT I/O",
+        "runs": b"\x00" * 7001 + b"\xff" * 999,
+        "text": text,
+        "random": bytes(rng.integers(0, 256, 30_000, dtype=np.uint8)),
+        "offsets": offsets.tobytes(),
+        "repeats": (b"basket/branch/entry;" * 2048)[:-3],
+        "single_sym": b"\x2a" * 4096,
+    }
+
+
+def dict_prefix() -> bytes:
+    rng = np.random.default_rng(7)
+    return bytes(rng.integers(97, 105, 2_000, dtype=np.uint8)) + b"suffix-common-tail"
