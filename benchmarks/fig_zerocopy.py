@@ -1,0 +1,341 @@
+"""Zero-copy data plane benchmark: PR-3 plane vs the PR-2 copying plane.
+
+Three stages, each an old-vs-new A/B on the same machine in the same
+process:
+
+* **read** — one ≥64 MiB branch.  Legacy path: per-basket
+  ``read_basket_raw`` (fresh ``bytes`` each) + ``join_baskets``
+  concatenation.  New path: ``read_branch`` scattering every basket into
+  the one destination allocation via ``unpack_basket_into``.  Measured in
+  GB/s and peak *extra* traced allocation (tracemalloc) relative to the
+  branch size.
+
+* **shm** — the process-pool transport, two rows.  ``transport``: raw
+  round-trip of 1 MiB baskets through a forkserver pool, pickled-pipe vs
+  slab-pool (the isolated mechanism — what the engine's transport swap
+  actually replaces).  ``lz4-unpack``: the same swap end-to-end under a
+  real pure-Python codec decode (``unpack_processes=True``) — reported for
+  honesty: today's from-scratch codecs are codec-bound, so the end-to-end
+  delta is small and grows as the cores get faster.
+
+* **ckpt** — end-to-end ``save_pytree`` + ``load_pytree`` of a ≥64 MiB
+  survey-style state.  Legacy emulation reproduces the PR-2 data plane:
+  whole-tree host materialization (what ``device_get`` does on a real
+  accelerator), per-basket ``tobytes()`` chunks, join-based reads.  New
+  path: streamed staging + scatter reads.  The ``off`` profile isolates
+  the copy plane (the paper's memory-bandwidth argument); the
+  ``checkpoint`` profile shows the realistic codec-bound mix.
+
+``--check`` is the CI perf-smoke gate: the zero-copy read must beat the
+copying read on the 64 MiB branch with peak extra allocation < 1.25× the
+branch size, and the data-plane checkpoint round-trip must be ≥ 1.5×
+faster than the legacy emulation with ≥ 1.5× lower save peak.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.checkpoint.manager import _flatten_with_paths
+from repro.core.basket import split_array
+from repro.core.bfile import BasketFile, BasketWriter, write_arrays
+from repro.core.codec import CompressionConfig
+from repro.core.policy import choose
+from repro.io.engine import CompressionEngine
+
+from .common import emit
+
+MB = 1 << 20
+
+
+def _peak(fn):
+    """Peak traced bytes (tracemalloc) for one call — run separately from
+    the timing reps so tracing overhead can't skew the A/B wall clocks."""
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    out = fn()
+    _cur, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return peak, out
+
+
+def _best(fn, reps):
+    """Best-of-reps wall seconds (no tracing)."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _gbps(nbytes: int, seconds: float) -> float:
+    return round(nbytes / seconds / 1e9, 3)
+
+
+# -- legacy (PR-2) data plane, reproduced locally for the A/B ---------------
+
+def _read_branch_legacy(f: BasketFile, name: str, workers: int = 0):
+    from concurrent.futures import ThreadPoolExecutor
+    entry = f.branches[name]
+    n = len(entry["baskets"])
+    if workers and n > 1:
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            chunks = list(ex.map(lambda i: f.read_basket_raw(name, i), range(n)))
+    else:
+        chunks = [f.read_basket_raw(name, i) for i in range(n)]
+    buf = b"".join(chunks)
+    return np.frombuffer(buf, dtype=np.dtype(entry["dtype"])) \
+        .reshape(tuple(entry["shape"])).copy()
+
+
+def _save_legacy(path: str, tree, profile: str, workers: int = 0) -> None:
+    """PR-2 save: materialize every tensor on host first (the device_get
+    semantics on a real accelerator), then per-basket bytes copies."""
+    host = {n: np.array(v, copy=True)
+            for n, v in _flatten_with_paths(tree).items() if v is not None}
+
+    def byte_chunks(arr):
+        for s, c, view in split_array(arr, 1 << 20):
+            yield s, c, bytes(view)     # the per-basket tobytes() copy
+
+    with BasketWriter(path, workers=workers) as w:
+        for name, arr in host.items():
+            w.write_branch_chunks(name, dtype=arr.dtype.str, shape=arr.shape,
+                                  chunks=byte_chunks(arr),
+                                  cfg=choose(name, arr, profile))
+        w.write_blob("__meta__", json.dumps({"bf16": []}).encode())
+
+
+def _load_legacy(path: str, workers: int = 0) -> dict:
+    with BasketFile(path) as f:
+        return {n: _read_branch_legacy(f, n, workers)
+                for n in f.branch_names() if n != "__meta__"}
+
+
+# -- workloads ---------------------------------------------------------------
+
+def _branch_data(size: int) -> np.ndarray:
+    rng = np.random.default_rng(17)
+    return np.cumsum(rng.integers(1, 9, size // 8)).astype(np.int64)
+
+
+def _survey_state(total_bytes: int) -> dict:
+    rng = np.random.default_rng(23)
+    nf = (total_bytes * 3 // 4) // 4
+    ni = (total_bytes // 4) // 8
+    return {
+        "params": {"w": rng.standard_normal(nf // 2).astype(np.float32).reshape(-1, 256),
+                   "b": rng.standard_normal(nf // 2).astype(np.float32)},
+        "opt": {"off": np.cumsum(rng.integers(1, 9, ni)).astype(np.int64)},
+        "step": np.int64(1234),
+    }
+
+
+def _bench_dir():
+    """tmpfs when available: the copy plane must not hide behind a slow
+    filesystem (CI runners and this container both mount /dev/shm)."""
+    for d in ("/dev/shm", None):
+        if d is None or (os.path.isdir(d) and os.access(d, os.W_OK)):
+            return tempfile.TemporaryDirectory(dir=d, prefix="fig_zerocopy_")
+
+
+def run(out_csv: str | None = None, quick: bool = False) -> list[dict]:
+    rows: list[dict] = []
+    reps = 3 if quick else 5
+    branch_mb = 64
+    state_mb = 64      # the acceptance point: >= 64 MiB survey state
+
+    with _bench_dir() as td:
+        # ---- checkpoint end-to-end --------------------------------------
+        # first, before any process-pool stage churns the machine: this is
+        # the acceptance-gate measurement
+        state = _survey_state(state_mb * MB)
+        total = sum(v.nbytes for v in
+                    _flatten_with_paths(state).values() if v is not None)
+        for profile, workers in [("off", 4), ("checkpoint", 4)]:
+            pl = os.path.join(td, f"l_{profile}.bskt")
+            pn = os.path.join(td, f"n_{profile}.bskt")
+            save_l = lambda: _save_legacy(pl, state, profile, workers)
+            save_n = lambda: save_pytree(pn, state, profile, workers=workers,
+                                         staging="stream")
+            load_l = lambda: _load_legacy(pl, workers)
+            load_n = lambda: load_pytree(pn, workers=workers)
+            t_sl, t_sn = _best(save_l, reps), _best(save_n, reps)
+            t_ll, t_ln = _best(load_l, reps), _best(load_n, reps)
+            peak_sl, _ = _peak(save_l)
+            peak_sn, _ = _peak(save_n)
+            flat_n = load_n()
+            np.testing.assert_array_equal(flat_n[0]["params.w"],
+                                          state["params"]["w"])
+            assert open(pl, "rb").read() == open(pn, "rb").read(), \
+                "legacy and streamed containers must be byte-identical"
+            rows.append({
+                "bench": "fig_zerocopy", "stage": "ckpt",
+                "case": f"{profile}-w{workers}", "bytes": total,
+                "old_GBps": _gbps(2 * total, t_sl + t_ll),
+                "new_GBps": _gbps(2 * total, t_sn + t_ln),
+                "speedup": round((t_sl + t_ll) / (t_sn + t_ln), 2),
+                "old_peak_x": round(peak_sl / total, 2),
+                "new_peak_x": round(peak_sn / total, 2),
+            })
+        del state, flat_n
+
+        # ---- read plane -------------------------------------------------
+        arr = _branch_data(branch_mb * MB)
+        for algo, level, precond, workers in [
+                ("none", 0, "none", 0),
+                ("none", 0, "none", 4),
+                ("zlib", 1, "delta8", 4)]:
+            p = os.path.join(td, f"r_{algo}_{workers}.bskt")
+            write_arrays(p, {"x": arr},
+                         lambda n, a: CompressionConfig(algo, level, precond),
+                         target_basket_bytes=MB, workers=0)
+            with BasketFile(p, workers=workers) as f:
+                f.read_branch("x")      # warm the fd/page cache
+                t_old = _best(lambda: _read_branch_legacy(f, "x", workers), reps)
+                t_new = _best(lambda: f.read_branch("x"), reps)
+                peak_old, _ = _peak(lambda: _read_branch_legacy(f, "x", workers))
+                peak_new, _ = _peak(lambda: f.read_branch("x"))
+            rows.append({
+                "bench": "fig_zerocopy", "stage": "read",
+                "case": f"{algo}+{precond}-w{workers}", "bytes": arr.nbytes,
+                "old_GBps": _gbps(arr.nbytes, t_old),
+                "new_GBps": _gbps(arr.nbytes, t_new),
+                "speedup": round(t_old / t_new, 2),
+                "old_peak_x": round(peak_old / arr.nbytes, 2),
+                "new_peak_x": round(peak_new / arr.nbytes, 2),
+            })
+
+        # ---- shm transport: isolated mechanism --------------------------
+        from repro.io import shmem
+        if shmem.available():
+            n_bufs = 32 if quick else 64
+            payload = _branch_data(MB).tobytes()
+            # the engine's guarded spawn (hidden __main__, forkserver) —
+            # a bare ProcessPoolExecutor here would re-import the whole
+            # bench suite per worker and break for stdin scripts
+            eng = CompressionEngine(4)
+            pool = eng._pool_for("lz4")     # the process pool
+            for f in [pool.submit(shmem.roundtrip_pickle, b"x")
+                      for _ in range(4)]:
+                f.result()                  # warm the workers
+
+            def rt_pickle():
+                for f in [pool.submit(shmem.roundtrip_pickle, payload)
+                          for _ in range(n_bufs)]:
+                    assert len(f.result()) == len(payload)
+
+            slabs = shmem.SlabPool()
+
+            def rt_shm():
+                futs = []
+                for _ in range(n_bufs):
+                    slab = slabs.acquire(len(payload))
+                    slab.fill(payload)
+                    futs.append((slab, pool.submit(
+                        shmem.roundtrip_slab, slab.name, len(payload))))
+                for slab, f in futs:
+                    assert f.result() == len(payload)
+                    slabs.release(slab)
+            t_p = _best(rt_pickle, reps)
+            t_s = _best(rt_shm, reps)
+            slabs.close()
+            eng.close()
+            rows.append({
+                "bench": "fig_zerocopy", "stage": "shm",
+                "case": "transport-1MiB-w4", "bytes": n_bufs * MB,
+                "old_GBps": _gbps(n_bufs * MB, t_p),
+                "new_GBps": _gbps(n_bufs * MB, t_s),
+                "speedup": round(t_p / t_s, 2),
+                "old_peak_x": "", "new_peak_x": "",
+            })
+
+        # ---- shm transport end-to-end (decode side, codec-bound) --------
+        from repro.io.prefetch import PrefetchReader
+        shm_mb = 16
+        shm_arr = _branch_data(shm_mb * MB)
+        sp = os.path.join(td, "shm.bskt")
+        write_arrays(sp, {"x": shm_arr},
+                     lambda n, a: CompressionConfig("lz4", 1, "delta8"),
+                     target_basket_bytes=MB, workers=0)
+        times = {}
+        for tag, shm in (("pickle", False), ("shm", "auto")):
+            with CompressionEngine(4, shm=shm, unpack_processes=True) as eng:
+                eng.warmup("lz4")
+                with BasketFile(sp) as f:
+                    reader = PrefetchReader(f, "x", engine=eng, ahead=8)
+
+                    def scan():
+                        np.testing.assert_array_equal(reader.read_all()[:8],
+                                                      shm_arr[:8])
+                    times[tag] = _best(scan, reps)
+                    reader.close()
+        rows.append({
+            "bench": "fig_zerocopy", "stage": "shm",
+            "case": "lz4-unpack-w4", "bytes": shm_arr.nbytes,
+            "old_GBps": _gbps(shm_arr.nbytes, times["pickle"]),
+            "new_GBps": _gbps(shm_arr.nbytes, times["shm"]),
+            "speedup": round(times["pickle"] / times["shm"], 2),
+            "old_peak_x": "", "new_peak_x": "",
+        })
+
+    emit(rows, out_csv)
+    return rows
+
+
+def check(rows: list[dict]) -> int:
+    """CI perf-smoke gate (see module docstring)."""
+    ok = True
+
+    def fail(msg):
+        nonlocal ok
+        print(f"FAIL: {msg}", file=sys.stderr)
+        ok = False
+
+    read = [r for r in rows if r["stage"] == "read"
+            and r["case"].startswith("none")]
+    if not read:
+        fail("no copy-bound read rows")
+    for r in read:
+        if r["speedup"] <= 1.0:
+            fail(f"zero-copy read not faster ({r['speedup']}x) on {r['case']}")
+        if r["new_peak_x"] >= 1.25:
+            fail(f"read peak extra allocation {r['new_peak_x']}x >= 1.25x "
+                 f"branch size on {r['case']}")
+    ck = [r for r in rows if r["stage"] == "ckpt" and r["case"].startswith("off")]
+    if not ck:
+        fail("no data-plane ckpt row")
+    for r in ck:
+        if r["speedup"] < 1.5:
+            fail(f"ckpt round-trip speedup {r['speedup']}x < 1.5x ({r['case']})")
+        if r["old_peak_x"] < 1.5 * r["new_peak_x"]:
+            fail(f"save peak not reduced >=1.5x: old {r['old_peak_x']}x vs "
+                 f"new {r['new_peak_x']}x ({r['case']})")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller states, fewer repeats")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the zero-copy plane beats the "
+                         "copying plane (CI perf-smoke)")
+    ap.add_argument("--out", default="artifacts/bench/fig_zerocopy.csv")
+    args = ap.parse_args(argv)
+    rows = run(args.out, quick=args.quick)
+    return check(rows) if args.check else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

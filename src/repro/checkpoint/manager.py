@@ -10,34 +10,48 @@ Fault-tolerance invariants:
   * **atomic**: BasketWriter writes tmp-then-rename; a crash mid-save can
     never leave a loadable-but-wrong file, and the manifest (named
     ``MANIFEST-<step>.json``) is written only after the data file commits.
-  * **async**: ``save()`` snapshots to host memory synchronously (cheap)
-    and compresses/writes on a background thread — training continues
-    during the multi-second compress+write of big states.
+  * **async + streamed**: ``save()`` compresses/writes on a background
+    thread while training continues.  Tensors are staged device→host in
+    chunked, double-buffered ``copy_to_host_async`` slices that feed the
+    basket compressor as they land (``staging="stream"``) — D2H transfer
+    overlaps compression and peak host memory drops from ~2× state size
+    (the old whole-tree snapshot) to ~``stage_depth`` baskets per
+    producer.  jax arrays are immutable, so the background stream reads
+    the live state safely; a training step that *donates* its state
+    buffers must pass ``snapshot=True`` (or use ``staging="gather"``),
+    which restores the old copy-then-write behavior.
   * **resumable**: ``latest_step()`` scans manifests, ignoring any step
     whose data file is missing/truncated.
   * **elastic re-shard**: tensors are saved *unsharded* (gathered to host);
     ``restore(shardings=...)`` device_puts each tensor with the target
     mesh's NamedSharding — restoring a 256-chip checkpoint onto 512 chips
-    (or 8) is the same call with a different mesh.
+    (or 8) is the same call with a different mesh.  ``load_pytree``
+    device_puts each branch as it decodes, so the full host dict never
+    materializes alongside the device copy.
   * **retention**: ``keep`` most recent checkpoints are kept, the rest
     garbage-collected after a successful save.
 """
 
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import threading
 import time
+from collections import deque
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
+from repro.core.basket import basket_rows, split_array
 from repro.core.bfile import BasketFile, BasketWriter
 from repro.core.policy import choose
 
 __all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+
+_TARGET_BASKET_BYTES = 1 << 20
 
 
 def _flatten_with_paths(tree) -> dict[str, Any]:
@@ -69,9 +83,75 @@ def _entry_stats(stats: dict, entry: dict) -> None:
     stats["comp"] += sum(b["meta"]["comp_len"] for b in entry["baskets"])
 
 
+# ---------------------------------------------------------------------------
+# device→host staging
+# ---------------------------------------------------------------------------
+
+def _device_chunk_stream(x, rows_per: int, bf16: bool, stage_depth: int = 2):
+    """Yield (start, count, host buffer) row-slices of a device array.
+
+    Up to ``stage_depth`` slices are in flight: each is sliced on device
+    and started toward the host with ``copy_to_host_async`` before the
+    previous one is consumed, so D2H transfer overlaps the caller's
+    compression.  Chunk boundaries equal :func:`split_array`'s
+    (``basket_rows``), keeping the container byte-identical to the
+    gather-then-split path."""
+    n = x.shape[0]
+    pending: deque = deque()
+    starts = range(0, n, rows_per)
+    it = iter(starts)
+    exhausted = False
+    while pending or not exhausted:
+        while not exhausted and len(pending) < max(stage_depth, 1):
+            try:
+                s = next(it)
+            except StopIteration:
+                exhausted = True
+                break
+            sl = x[s:min(s + rows_per, n)]
+            try:
+                sl.copy_to_host_async()
+            except Exception:       # pragma: no cover - backend-dependent
+                pass
+            pending.append((s, sl))
+        if pending:
+            s, sl = pending.popleft()
+            arr = np.asarray(sl)
+            if bf16:
+                arr = arr.view(np.uint16)
+            arr = np.ascontiguousarray(arr)
+            yield s, arr.shape[0], memoryview(arr).cast("B")
+
+
+def _branch_stream(name: str, val, profile: str,
+                   target_basket_bytes: int = _TARGET_BASKET_BYTES,
+                   stage_depth: int = 2):
+    """(dtype_str, shape, chunk_iter, cfg) for one tensor.
+
+    Device arrays stream through :func:`_device_chunk_stream`; host arrays
+    split into zero-copy views.  The codec policy probes only the first
+    staged chunk (its first 4096 elements — the same sample the whole-array
+    path reads), so no full-tensor host copy is ever made."""
+    if not isinstance(val, jax.Array) or val.ndim == 0 or val.shape[0] == 0:
+        arr = _np_view(val)
+        return (arr.dtype.str, arr.shape,
+                split_array(arr, target_basket_bytes),
+                choose(name, arr, profile))
+    bf16 = str(val.dtype) == "bfloat16"
+    np_dtype = np.dtype(np.uint16) if bf16 else np.dtype(val.dtype)
+    shape = tuple(val.shape)
+    rows_per = basket_rows(shape, np_dtype.itemsize, target_basket_bytes)
+    chunks = _device_chunk_stream(val, rows_per, bf16, stage_depth)
+    first = next(chunks)
+    probe = np.frombuffer(first[2], dtype=np_dtype)
+    cfg = choose(name, probe, profile)
+    return (np_dtype.str, shape, itertools.chain([first], chunks), cfg)
+
+
 def save_pytree(path: str, tree, profile: str = "checkpoint",
                 extra_meta: Optional[dict] = None,
-                workers: int = 0, producers: int = 1) -> dict:
+                workers: int = 0, producers: int = 1,
+                staging: str = "stream", stage_depth: int = 2) -> dict:
     """Write a pytree of (host or device) arrays as one BasketFile.
 
     ``workers>0`` compresses each tensor's baskets in parallel through the
@@ -82,7 +162,16 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     with ``producers>1`` branch order (hence container bytes) depends on
     thread timing; contents still round-trip identically (restore is
     name-keyed).  Byte-determinism holds for ``producers<=1`` at any
-    ``workers``."""
+    ``workers`` and either ``staging`` mode (identical basket boundaries).
+
+    ``staging="stream"`` (default) never materializes a tensor on host:
+    device arrays stage down in ≤``stage_depth`` in-flight basket-sized
+    ``copy_to_host_async`` slices that feed the compressor as they land —
+    peak extra host memory is ~``stage_depth`` baskets per producer
+    instead of the whole tree.  ``staging="gather"`` is the old behavior
+    (full ``device_get`` per tensor before compression)."""
+    if staging not in ("stream", "gather"):
+        raise ValueError(f"staging must be 'stream' or 'gather', got {staging!r}")
     flat = {n: v for n, v in _flatten_with_paths(tree).items() if v is not None}
     stats = {"branches": 0, "raw": 0, "comp": 0}
     bf16_paths = [n for n, v in flat.items()
@@ -92,12 +181,21 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
         meta.update(extra_meta)
     meta_blob = json.dumps(meta).encode()
 
+    def branch_args(name):
+        if staging == "stream":
+            return _branch_stream(name, flat[name], profile,
+                                  stage_depth=stage_depth)
+        arr = _np_view(flat[name])
+        return (arr.dtype.str, arr.shape,
+                split_array(arr, _TARGET_BASKET_BYTES),
+                choose(name, arr, profile))
+
     if producers <= 1:
         with BasketWriter(path, workers=workers) as w:
-            for name, val in flat.items():
-                arr = _np_view(val)
-                _entry_stats(stats, w.write_branch(
-                    name, arr, choose(name, arr, profile)))
+            for name in flat:
+                dtype, shape, chunks, cfg = branch_args(name)
+                _entry_stats(stats, w.write_branch_chunks(
+                    name, dtype=dtype, shape=shape, chunks=chunks, cfg=cfg))
             w.write_blob("__meta__", meta_blob)
         return stats
 
@@ -111,9 +209,9 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
             try:
                 for name in shard:
                     buf = m.buffer()
-                    arr = _np_view(flat[name])
-                    entry = buf.write_branch(name, arr,
-                                             choose(name, arr, profile))
+                    dtype, shape, chunks, cfg = branch_args(name)
+                    entry = buf.write_branch_chunks(
+                        name, dtype=dtype, shape=shape, chunks=chunks, cfg=cfg)
                     m.merge(buf)
                     with lock:
                         _entry_stats(stats, entry)
@@ -141,7 +239,12 @@ def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
     ``template``: pytree whose structure/leaf-Nones define the output (leaf
     values unused).  Without it, a flat {dotted-path: array} dict returns.
     ``shardings``: matching pytree of NamedShardings -> device_put per leaf
-    (elastic re-shard).  ``prefetch>0`` = decompress-ahead reads."""
+    (elastic re-shard).  ``prefetch>0`` = decompress-ahead reads.
+
+    Branches are ``device_put`` *as they decode* (when a sharding is
+    given), so the host copy of each tensor is dropped immediately instead
+    of the whole host dict coexisting with the device tree."""
+    flat_s = _flatten_with_paths(shardings) if shardings is not None else {}
     with BasketFile(path, workers=workers, prefetch=prefetch) as f:
         meta = json.loads(bytes(f.read_branch("__meta__")).decode())
         bf16 = set(meta.get("bf16", []))
@@ -150,14 +253,15 @@ def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
             arr = f.read_branch(name, workers=workers)
             if name in bf16:
                 arr = arr.view(jax.numpy.bfloat16.dtype)
-            return arr
+            sh = flat_s.get(name)
+            # staging symmetry: put each branch on device now, free host
+            return jax.device_put(arr, sh) if sh is not None else arr
 
         flat = {n: read(n) for n in f.branch_names() if n != "__meta__"}
     if template is None:
         return flat, meta
 
     flat_t = _flatten_with_paths(template)
-    flat_s = _flatten_with_paths(shardings) if shardings is not None else {}
 
     def rebuild(node, prefix):
         if isinstance(node, dict):
@@ -165,9 +269,7 @@ def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
         key = prefix.rstrip(".")
         if node is None or key + "#none" in flat_t:
             return None
-        arr = flat[key]
-        sh = flat_s.get(key)
-        return jax.device_put(arr, sh) if sh is not None else arr
+        return flat[key]
 
     return rebuild(template, ""), meta
 
@@ -183,6 +285,7 @@ class CheckpointManager:
         self.producers = producers    # tensor-parallel producer threads (merger)
         self._worker: Optional[threading.Thread] = None
         self._last_stats: Optional[dict] = None
+        self._error: Optional[BaseException] = None
 
     # -- paths -----------------------------------------------------------
 
@@ -195,27 +298,44 @@ class CheckpointManager:
     # -- save ------------------------------------------------------------
 
     def save(self, step: int, tree, extra_meta: Optional[dict] = None,
-             wait: bool = False) -> None:
-        """Snapshot now; compress+write in the background."""
+             wait: bool = False, snapshot: bool = False) -> None:
+        """Compress+write in the background; training continues.
+
+        By default no host snapshot is taken: the background thread stages
+        each (immutable) device tensor down in basket-sized double-buffered
+        slices, overlapping D2H with compression and bounding peak host
+        memory at a few baskets instead of a full state copy.
+        ``snapshot=True`` restores the old gather-everything-first behavior
+        — required when the training step *donates* the state buffers (a
+        donated array must not be read after the next step dispatches; a
+        donated-away array makes the background save fail, and that
+        failure re-raises from the next ``save()``/``wait()``)."""
         self.wait()                                   # one in flight at a time
-        host_tree = jax.tree.map(
-            lambda x: None if x is None else np.asarray(jax.device_get(x)),
-            tree, is_leaf=lambda x: x is None)
+        if snapshot:
+            src = jax.tree.map(
+                lambda x: None if x is None else np.asarray(jax.device_get(x)),
+                tree, is_leaf=lambda x: x is None)
+        else:
+            src = tree
 
         def work():
-            t0 = time.monotonic()
-            stats = save_pytree(self._data_path(step), host_tree,
-                                self.profile, extra_meta,
-                                workers=self.workers,
-                                producers=self.producers)
-            manifest = {"step": step, "time": time.time(),
-                        "wall_s": time.monotonic() - t0, **stats}
-            tmp = self._manifest_path(step) + ".tmp"
-            with open(tmp, "w") as fh:
-                json.dump(manifest, fh)
-            os.replace(tmp, self._manifest_path(step))
-            self._last_stats = manifest
-            self._gc()
+            try:
+                t0 = time.monotonic()
+                stats = save_pytree(self._data_path(step), src,
+                                    self.profile, extra_meta,
+                                    workers=self.workers,
+                                    producers=self.producers,
+                                    staging="stream")
+                manifest = {"step": step, "time": time.time(),
+                            "wall_s": time.monotonic() - t0, **stats}
+                tmp = self._manifest_path(step) + ".tmp"
+                with open(tmp, "w") as fh:
+                    json.dump(manifest, fh)
+                os.replace(tmp, self._manifest_path(step))
+                self._last_stats = manifest
+                self._gc()
+            except BaseException as e:   # surfaced by the next save()/wait()
+                self._error = e
 
         self._worker = threading.Thread(target=work, daemon=True)
         self._worker.start()
@@ -223,9 +343,16 @@ class CheckpointManager:
             self.wait()
 
     def wait(self) -> Optional[dict]:
+        """Join any in-flight save; re-raises a background-save failure (a
+        silently lost checkpoint must not look like a successful one)."""
         if self._worker is not None:
             self._worker.join()
             self._worker = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("background checkpoint save failed "
+                               "(state donated before the save finished? "
+                               "pass save(..., snapshot=True))") from err
         return self._last_stats
 
     # -- restore ---------------------------------------------------------
@@ -255,9 +382,11 @@ class CheckpointManager:
     # -- retention -------------------------------------------------------
 
     def _gc(self):
+        from repro.io import fdcache
         steps = self.steps()
         for s in steps[: max(len(steps) - self.keep, 0)]:
             for p in (self._data_path(s), self._manifest_path(s)):
+                fdcache.invalidate(p)   # a cached fd would pin the inode
                 try:
                     os.remove(p)
                 except FileNotFoundError:

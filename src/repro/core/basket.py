@@ -8,6 +8,13 @@ decompressed in isolation — that independence is what enables the paper's
 
 Basket metadata also carries an adler32 of the uncompressed bytes
 (vectorized implementation — the CF-ZLIB checksum path), verified on read.
+
+Zero-copy data plane: ``split_array`` yields buffer-protocol *views* of the
+source array (no per-basket ``tobytes()``), ``pack_basket`` accepts any
+buffer-protocol object, and ``unpack_basket_into`` decodes a basket directly
+into a caller-provided destination slice — so a branch read allocates its
+output array exactly once and baskets scatter into it with no per-basket
+``bytes`` and no final concatenation.
 """
 
 from __future__ import annotations
@@ -20,7 +27,26 @@ import numpy as np
 from . import codec as _codec
 from .checksum import adler32_hw
 
-__all__ = ["BasketMeta", "pack_basket", "unpack_basket", "split_array", "join_baskets"]
+__all__ = ["BasketMeta", "pack_basket", "unpack_basket", "unpack_basket_into",
+           "split_array", "join_baskets", "byte_offsets"]
+
+
+def byte_offsets(lens) -> tuple[list[int], int]:
+    """Destination byte offset of each basket from its ``orig_len``
+    (cumulative), plus the total — the scatter map every zero-copy branch
+    read uses."""
+    offs, pos = [], 0
+    for n in lens:
+        offs.append(pos)
+        pos += int(n)
+    return offs, pos
+
+
+def _nbytes(buf) -> int:
+    """Byte length of any buffer-protocol object."""
+    if isinstance(buf, (bytes, bytearray)):
+        return len(buf)
+    return memoryview(buf).nbytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,9 +72,14 @@ class BasketMeta:
         return BasketMeta(**d)
 
 
-def pack_basket(raw: bytes, cfg: _codec.CompressionConfig,
+def pack_basket(raw, cfg: _codec.CompressionConfig,
                 entry_start: int = 0, entry_count: int = 0) -> tuple[bytes, BasketMeta]:
-    """Precondition + compress one buffer; returns (payload, metadata)."""
+    """Precondition + compress one buffer; returns (payload, metadata).
+
+    ``raw`` may be any buffer-protocol object; it is never copied up front
+    (the preconditioner/codec read it through zero-copy views).  The
+    returned payload is bytes-like; for the ``none``/``none`` identity
+    configuration it may alias ``raw`` itself."""
     from . import precond as _precond
     staged = _precond.apply_precond(cfg.precond, raw) if cfg.precond != "none" else raw
     payload = _codec.get_codec(cfg.algo).compress(staged, cfg.level, cfg.dictionary) \
@@ -57,9 +88,9 @@ def pack_basket(raw: bytes, cfg: _codec.CompressionConfig,
         algo=cfg.algo if cfg.enabled else "none",
         level=cfg.level if cfg.enabled else 0,
         precond=cfg.precond,
-        orig_len=len(raw),
-        stored_len=len(staged),
-        comp_len=len(payload),
+        orig_len=_nbytes(raw),
+        stored_len=_nbytes(staged),
+        comp_len=_nbytes(payload),
         checksum=adler32_hw(raw),
         entry_start=entry_start,
         entry_count=entry_count,
@@ -68,21 +99,52 @@ def pack_basket(raw: bytes, cfg: _codec.CompressionConfig,
     return payload, meta
 
 
-def unpack_basket(payload: bytes, meta: BasketMeta,
-                  dictionary: Optional[bytes] = None, verify: bool = True) -> bytes:
-    """Invert :func:`pack_basket`; verifies the checksum unless disabled."""
-    cfg = _codec.CompressionConfig(
-        algo=meta.algo if meta.algo != "none" else "zlib",  # cfg validates algo; level 0 disables
+def _meta_cfg(meta: BasketMeta, dictionary: Optional[bytes]) -> _codec.CompressionConfig:
+    if meta.algo == "none":
+        return _codec.CompressionConfig(algo="none", level=0, precond=meta.precond)
+    return _codec.CompressionConfig(
+        algo=meta.algo,
         level=meta.level,
         precond=meta.precond,
         dictionary=dictionary if meta.has_dict else None,
-    ) if meta.algo != "none" else _codec.CompressionConfig(algo="none", level=0, precond=meta.precond)
+    )
+
+
+def unpack_basket(payload: bytes, meta: BasketMeta,
+                  dictionary: Optional[bytes] = None, verify: bool = True) -> bytes:
+    """Invert :func:`pack_basket`; verifies the checksum unless disabled."""
+    cfg = _meta_cfg(meta, dictionary)
     raw = _codec.decompress(payload, meta.orig_len, cfg, stored_len=meta.stored_len)
     if len(raw) != meta.orig_len:
         raise ValueError(f"basket decoded {len(raw)} bytes, expected {meta.orig_len}")
     if verify and adler32_hw(raw) != meta.checksum:
         raise ValueError("basket checksum mismatch (corrupt data)")
     return raw
+
+
+def unpack_basket_into(payload, meta: BasketMeta, out,
+                       dictionary: Optional[bytes] = None,
+                       verify: bool = True) -> int:
+    """Decompress one basket directly into ``out`` (writable buffer).
+
+    ``out`` must be at least ``meta.orig_len`` bytes; exactly that many are
+    written (a larger buffer keeps its remaining bytes untouched, so
+    misaligned/oversized destination slices are fine).  The checksum is
+    verified on the destination bytes.  Returns ``meta.orig_len``."""
+    from . import precond as _precond
+    dst = _precond._as_out(out)     # validates writability + contiguity
+    if dst.size < meta.orig_len:
+        raise ValueError(
+            f"output buffer too small: {dst.size} < {meta.orig_len}")
+    dst = dst[:meta.orig_len]
+    cfg = _meta_cfg(meta, dictionary)
+    n = _codec.decompress_into(payload, meta.orig_len, cfg, dst,
+                               stored_len=meta.stored_len)
+    if n != meta.orig_len:
+        raise ValueError(f"basket decoded {n} bytes, expected {meta.orig_len}")
+    if verify and adler32_hw(dst) != meta.checksum:
+        raise ValueError("basket checksum mismatch (corrupt data)")
+    return n
 
 
 # ---------------------------------------------------------------------------
@@ -92,13 +154,17 @@ def unpack_basket(payload: bytes, meta: BasketMeta,
 def split_array(arr: np.ndarray, target_basket_bytes: int = 1 << 20):
     """Split an array along axis 0 into basket-sized row chunks.
 
-    Yields (entry_start, entry_count, bytes).  Row-granular so each basket
+    Yields (entry_start, entry_count, buffer).  Row-granular so each basket
     maps to an entry range — the seekable-restart property the data
     pipeline's checkpoint cursor relies on.
+
+    The buffers are zero-copy ``memoryview`` slices of ``arr`` (flattened
+    to bytes); they stay valid while the generator is alive.  Consumers
+    that outlive the iteration must ``bytes()`` them.
     """
     arr = np.ascontiguousarray(arr)
     if arr.ndim == 0:
-        yield 0, 1, arr.tobytes()
+        yield 0, 1, memoryview(arr.reshape(1)).cast("B")
         return
     n = arr.shape[0]
     row_bytes = max(1, arr.nbytes // max(n, 1))
@@ -107,11 +173,34 @@ def split_array(arr: np.ndarray, target_basket_bytes: int = 1 << 20):
         stop = min(start + rows_per, n)
         if start >= n:
             break
-        yield start, stop - start, arr[start:stop].tobytes()
+        yield start, stop - start, memoryview(arr[start:stop]).cast("B")
     if n == 0:
         yield 0, 0, b""
 
 
-def join_baskets(chunks: list[bytes], dtype: str, shape: tuple) -> np.ndarray:
-    buf = b"".join(chunks)
-    return np.frombuffer(buf, dtype=np.dtype(dtype)).reshape(shape).copy()
+def basket_rows(shape: tuple, itemsize: int,
+                target_basket_bytes: int = 1 << 20) -> int:
+    """Rows per basket for a (shape, itemsize) branch — exactly the chunk
+    boundaries :func:`split_array` produces, computable without the array.
+    The streamed checkpoint staging path uses this so device-sliced chunks
+    land on identical basket boundaries (byte-determinism invariant)."""
+    n = shape[0] if shape else 1
+    total = int(itemsize) * int(np.prod(shape, dtype=np.int64)) if shape else int(itemsize)
+    row_bytes = max(1, total // max(n, 1))
+    return max(1, target_basket_bytes // row_bytes)
+
+
+def join_baskets(chunks: list, dtype: str, shape: tuple) -> np.ndarray:
+    """Assemble decoded chunks into one array with a single allocation
+    (kept for API compatibility; the hot read path scatters baskets into
+    the destination with :func:`unpack_basket_into` instead)."""
+    out = np.empty(shape, dtype=np.dtype(dtype))
+    flat = out.reshape(-1).view(np.uint8)
+    pos = 0
+    for c in chunks:
+        b = np.frombuffer(c, dtype=np.uint8) if not isinstance(c, np.ndarray) else c
+        flat[pos:pos + b.size] = b
+        pos += b.size
+    if pos != flat.size:
+        raise ValueError(f"chunks total {pos} bytes, expected {flat.size}")
+    return out

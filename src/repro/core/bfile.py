@@ -28,8 +28,15 @@ from typing import Optional
 
 import numpy as np
 
-from .basket import BasketMeta, join_baskets, split_array, unpack_basket
+from .basket import (BasketMeta, byte_offsets, join_baskets, split_array,
+                     unpack_basket, unpack_basket_into)
 from .codec import CompressionConfig
+
+
+def _pread(path: str, offset: int, n: int) -> bytes:
+    # lazy import: repro.io imports repro.core at package-init time
+    from repro.io import fdcache
+    return fdcache.pread(path, offset, n)
 
 __all__ = ["BasketWriter", "BasketFile", "write_arrays", "read_arrays"]
 
@@ -64,11 +71,21 @@ class BasketWriter:
                      cfg: Optional[CompressionConfig] = None,
                      target_basket_bytes: int = 1 << 20) -> dict:
         """Serialize an array column-wise into compressed baskets."""
+        arr = np.asarray(arr)
+        return self.write_branch_chunks(
+            name, dtype=arr.dtype.str, shape=arr.shape,
+            chunks=split_array(arr, target_basket_bytes), cfg=cfg)
+
+    def write_branch_chunks(self, name: str, *, dtype, shape, chunks,
+                            cfg: Optional[CompressionConfig] = None) -> dict:
+        """Stream a branch from a ``(entry_start, entry_count, buffer)``
+        chunk iterator without materializing the whole array — the
+        checkpointer's device→host staging path.  Chunk boundaries are the
+        caller's; to match :func:`write_branch` bytes exactly, produce
+        the boundaries of :func:`repro.core.basket.basket_rows`."""
         if name in self._branches:
             raise ValueError(f"branch {name!r} already written")
         cfg = cfg or CompressionConfig()
-        arr = np.asarray(arr)
-        chunks = split_array(arr, target_basket_bytes)
         engine = self._engine
         if engine is None:
             from repro.io.engine import CompressionEngine
@@ -77,11 +94,11 @@ class BasketWriter:
         baskets = []
         for _start, _count, payload, meta in packed:
             off = self._f.tell()
-            self._f.write(payload)
+            self._f.write(payload)   # accepts memoryview payloads zero-copy
             baskets.append({"offset": off, "meta": meta.to_json()})
         entry = {
-            "dtype": arr.dtype.str,
-            "shape": list(arr.shape),
+            "dtype": np.dtype(dtype).str,
+            "shape": list(shape),
             "config": {"algo": cfg.algo, "level": cfg.level, "precond": cfg.precond},
             "dictionary": base64.b64encode(cfg.dictionary).decode() if cfg.dictionary else None,
             "baskets": baskets,
@@ -186,18 +203,24 @@ class BasketFile:
         the fast-merge path."""
         entry = self.branches[name]
         b = entry["baskets"][i]
-        with open(self.path, "rb") as f:
-            f.seek(b["offset"])
-            return f.read(b["meta"]["comp_len"])
+        return _pread(self.path, b["offset"], b["meta"]["comp_len"])
 
     def read_basket_raw(self, name: str, i: int) -> bytes:
         entry = self.branches[name]
         b = entry["baskets"][i]
         meta = BasketMeta.from_json(b["meta"])
-        with open(self.path, "rb") as f:
-            f.seek(b["offset"])
-            payload = f.read(meta.comp_len)
+        payload = _pread(self.path, b["offset"], meta.comp_len)
         return unpack_basket(payload, meta, self._dictionary(entry), verify=self.verify)
+
+    def read_basket_into(self, name: str, i: int, out) -> int:
+        """Read + decode basket ``i`` directly into ``out`` (writable
+        buffer ≥ ``orig_len`` bytes) — the zero-copy scatter step."""
+        entry = self.branches[name]
+        b = entry["baskets"][i]
+        meta = BasketMeta.from_json(b["meta"])
+        payload = _pread(self.path, b["offset"], meta.comp_len)
+        return unpack_basket_into(payload, meta, out, self._dictionary(entry),
+                                  verify=self.verify)
 
     def _reader(self, name: str):
         """Cached PrefetchReader per branch (engine shared across them);
@@ -212,21 +235,42 @@ class BasketFile:
                     self, name, ahead=self.prefetch, engine=self._engine)
             return self._readers[name]
 
+    @staticmethod
+    def _byte_offsets(entry: dict) -> tuple[list[int], int]:
+        return byte_offsets(b["meta"]["orig_len"] for b in entry["baskets"])
+
     def read_branch(self, name: str, workers: Optional[int] = None) -> np.ndarray:
         """Read + decompress a branch; ``workers>0`` = parallel decompression
-        (the paper's simultaneous-read-and-decompress)."""
+        (the paper's simultaneous-read-and-decompress).
+
+        Zero-copy plane: the destination array is allocated once and every
+        basket decodes directly into its slice — no per-basket ``bytes``,
+        no final concatenation."""
         if workers is None:
             workers = self.workers
         if self.prefetch:
             return self._reader(name).read_all()
         entry = self.branches[name]
         n = len(entry["baskets"])
+        out = np.empty(tuple(entry["shape"]), dtype=np.dtype(entry["dtype"]))
+        offs, total = self._byte_offsets(entry)
+        if total != out.nbytes:
+            # malformed TOC: fall back to the copying join (raises there)
+            chunks = [self.read_basket_raw(name, i) for i in range(n)]
+            return join_baskets(chunks, entry["dtype"], tuple(entry["shape"]))
+        flat = out.reshape(-1).view(np.uint8)
+
+        def scatter(i: int) -> None:
+            ln = entry["baskets"][i]["meta"]["orig_len"]
+            self.read_basket_into(name, i, flat[offs[i]:offs[i] + ln])
+
         if workers and n > 1:
             with ThreadPoolExecutor(max_workers=workers) as ex:
-                chunks = list(ex.map(lambda i: self.read_basket_raw(name, i), range(n)))
+                list(ex.map(scatter, range(n)))
         else:
-            chunks = [self.read_basket_raw(name, i) for i in range(n)]
-        return join_baskets(chunks, entry["dtype"], tuple(entry["shape"]))
+            for i in range(n):
+                scatter(i)
+        return out
 
     def read_entries(self, name: str, start: int, stop: int) -> np.ndarray:
         """Row-range read touching only the covering baskets (seekability).
@@ -236,19 +280,24 @@ class BasketFile:
             return self._reader(name).read_entries(start, stop)
         entry = self.branches[name]
         shape = tuple(entry["shape"])
-        chunks, first_entry = [], None
+        dtype = np.dtype(entry["dtype"])
+        cover, first_entry, total = [], None, 0
         for i, b in enumerate(entry["baskets"]):
-            m = BasketMeta.from_json(b["meta"])
-            if m.entry_start + m.entry_count <= start or m.entry_start >= stop:
+            m = b["meta"]
+            if m["entry_start"] + m["entry_count"] <= start or m["entry_start"] >= stop:
                 continue
             if first_entry is None:
-                first_entry = m.entry_start
-            chunks.append(self.read_basket_raw(name, i))
-        if not chunks:
-            return np.zeros((0,) + shape[1:], dtype=np.dtype(entry["dtype"]))
-        buf = b"".join(chunks)
-        rows = len(buf) // (np.dtype(entry["dtype"]).itemsize * int(np.prod(shape[1:], dtype=np.int64)) or 1)
-        arr = np.frombuffer(buf, dtype=np.dtype(entry["dtype"])).reshape((rows,) + shape[1:])
+                first_entry = m["entry_start"]
+            cover.append((i, total, m["orig_len"]))
+            total += m["orig_len"]
+        if not cover:
+            return np.zeros((0,) + shape[1:], dtype=dtype)
+        row_elems = int(np.prod(shape[1:], dtype=np.int64)) or 1
+        rows = total // (dtype.itemsize * row_elems)
+        arr = np.empty((rows,) + shape[1:], dtype=dtype)
+        flat = arr.reshape(-1).view(np.uint8)
+        for i, off, ln in cover:
+            self.read_basket_into(name, i, flat[off:off + ln])
         return arr[start - first_entry: stop - first_entry].copy()
 
     def compressed_bytes(self, name: Optional[str] = None) -> int:
@@ -264,14 +313,17 @@ class BasketFile:
         return self.raw_bytes(name) / c if c else float("inf")
 
     def close(self) -> None:
-        """Release prefetch readers and the engine pool (no-op unless
-        ``workers``/``prefetch`` were used)."""
+        """Release prefetch readers, the engine pool, and this path's
+        cached fd (so a closed-then-deleted container's inode isn't pinned
+        until LRU eviction)."""
         for r in self._readers.values():
             r.close()
         self._readers.clear()
         if self._engine is not None:
             self._engine.close()
             self._engine = None
+        from repro.io import fdcache
+        fdcache.invalidate(self.path)
 
     def __enter__(self):
         return self

@@ -45,7 +45,8 @@ try:
 except ImportError:  # pragma: no cover
     HAVE_ZSTD = False
 
-__all__ = ["Codec", "CompressionConfig", "CODECS", "get_codec", "compress", "decompress"]
+__all__ = ["Codec", "CompressionConfig", "CODECS", "get_codec", "compress",
+           "decompress", "decompress_into"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,7 +229,11 @@ class CompressionConfig:
 
 def compress(data: bytes, cfg: CompressionConfig) -> bytes:
     """Apply preconditioner pipeline then codec.  Level 0 = passthrough
-    (but preconditioning is still applied so roundtrip stays symmetric)."""
+    (but preconditioning is still applied so roundtrip stays symmetric).
+
+    ``data`` may be any buffer-protocol object (bytes, memoryview,
+    contiguous ndarray) — the zero-copy chunks from ``split_array`` flow
+    through here without an intermediate ``bytes`` materialization."""
     buf = _precond.apply_precond(cfg.precond, data) if cfg.precond != "none" else data
     if not cfg.enabled:
         return buf
@@ -249,3 +254,19 @@ def decompress(comp: bytes, orig_len: int, cfg: CompressionConfig,
     if cfg.precond != "none":
         buf = _precond.undo_precond(cfg.precond, buf, orig_len)
     return buf
+
+
+def decompress_into(comp: bytes, orig_len: int, cfg: CompressionConfig, out,
+                    stored_len: Optional[int] = None) -> int:
+    """Invert :func:`compress` directly into ``out`` (writable buffer).
+
+    The codec stage still produces an intermediate (none of the entropy
+    backends expose a decode-into hook), but the preconditioner inverse —
+    or, for ``precond="none"``, the single payload copy — lands in the
+    caller's destination, so ``read_branch`` can scatter every basket into
+    one preallocated array with no per-basket ``bytes`` and no final
+    concatenation.  Returns the number of bytes written."""
+    if stored_len is None:
+        stored_len = orig_len
+    buf = comp if not cfg.enabled else get_codec(cfg.algo).decompress(comp, stored_len, cfg.dictionary)
+    return _precond.undo_precond_into(cfg.precond, buf, out, orig_len)

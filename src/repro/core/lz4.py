@@ -98,10 +98,12 @@ def compress_block(data: bytes, level: int = 1, dict_prefix: bytes = b"") -> byt
     prefix seeds the hash table and is matchable, but is never emitted —
     the decoder must be given the same prefix.
     """
+    if not isinstance(data, (bytes, bytearray, memoryview)):
+        data = memoryview(data).cast("B")   # buffer-protocol input, zero-copy
     prefix = dict_prefix[-65535:] if dict_prefix else b""
     plen = len(prefix)
     if plen:
-        buf = prefix + data
+        buf = prefix + bytes(data)
         src = np.frombuffer(buf, dtype=np.uint8)
         data = buf  # emit() slices literals out of the combined buffer
     else:

@@ -34,15 +34,34 @@ __all__ = [
     "PRECONDITIONERS",
     "apply_precond",
     "undo_precond",
+    "undo_precond_into",
 ]
 
 
 def _as_bytes(buf) -> np.ndarray:
-    """View any buffer as a flat uint8 array (zero-copy where possible)."""
+    """View any buffer-protocol object as a flat uint8 array (zero-copy)."""
     a = np.frombuffer(buf, dtype=np.uint8) if not isinstance(buf, np.ndarray) else buf
     if a.dtype != np.uint8:
         a = a.view(np.uint8)
     return a.reshape(-1)
+
+
+def _as_out(out) -> np.ndarray:
+    """View a writable buffer-protocol object as a flat uint8 array."""
+    if isinstance(out, np.ndarray):
+        if not out.flags.c_contiguous:
+            # reshape(-1) on a strided view would COPY and orphan the write
+            raise ValueError("output array must be C-contiguous")
+        a = out if out.dtype == np.uint8 else out.view(np.uint8)
+        a = a.reshape(-1)
+    else:
+        mv = memoryview(out)
+        if mv.readonly:
+            raise ValueError("output buffer is read-only")
+        a = np.frombuffer(mv, dtype=np.uint8)
+    if not a.flags.writeable:
+        raise ValueError("output buffer is read-only")
+    return a
 
 
 # ---------------------------------------------------------------------------
@@ -182,19 +201,81 @@ def zigzag_decode(buf, itemsize: int = 4) -> bytes:
 
 
 # ---------------------------------------------------------------------------
+# In-place inverses — the zero-copy decode path.  Each ``*_into`` writes the
+# decoded bytes directly into a caller-provided buffer (the destination
+# array slice in ``read_branch``), replacing the tobytes()+join copies of
+# the byte-returning inverses above.  Semantics are identical:
+# ``inv_into(fwd(x), itemsize, out) => out[:len(x)] == x``.
+# ---------------------------------------------------------------------------
+
+def _copy_into(buf, itemsize, out, nbytes=None) -> int:
+    a = _as_bytes(buf)
+    o = _as_out(out)
+    o[:a.size] = a
+    return a.size
+
+
+def unshuffle_into(buf, itemsize: int, out, nbytes=None) -> int:
+    a = _as_bytes(buf)
+    o = _as_out(out)
+    n = a.size - (a.size % itemsize)
+    # direct scatter: the transpose assignment writes straight into ``out``
+    o[:n].reshape(-1, itemsize)[...] = a[:n].reshape(itemsize, -1).T
+    o[n:a.size] = a[n:]
+    return a.size
+
+
+def bitunshuffle_into(buf, itemsize: int, out, nbytes=None) -> int:
+    dec = bitunshuffle(buf, itemsize, nbytes)   # packbits can't target out
+    o = _as_out(out)
+    o[:len(dec)] = np.frombuffer(dec, dtype=np.uint8)
+    return len(dec)
+
+
+def delta_decode_into(buf, itemsize: int, out, nbytes=None) -> int:
+    dtype = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}[itemsize]
+    a = _as_bytes(buf)
+    o = _as_out(out)
+    n = a.size - (a.size % itemsize)
+    v = a[:n].view(dtype)
+    with np.errstate(over="ignore"):
+        dec = np.cumsum(v.astype(dtype), dtype=dtype)
+    o[:n] = dec.view(np.uint8)
+    o[n:a.size] = a[n:]
+    return a.size
+
+
+def zigzag_decode_into(buf, itemsize: int, out, nbytes=None) -> int:
+    a = _as_bytes(buf)
+    o = _as_out(out)
+    n = a.size - (a.size % itemsize)
+    dec = np.frombuffer(zigzag_decode(a[:n], itemsize), dtype=np.uint8)
+    o[:n] = dec
+    o[n:a.size] = a[n:]
+    return a.size
+
+
+# ---------------------------------------------------------------------------
 # Registry — composable pipelines, named like "bitshuffle4", "delta4+shuffle4"
 # ---------------------------------------------------------------------------
 
-def _make_entry(fwd, inv, needs_len=False):
-    return {"fwd": fwd, "inv": inv, "needs_len": needs_len}
+def _make_entry(fwd, inv, needs_len=False, inv_into=None):
+    return {"fwd": fwd, "inv": inv, "needs_len": needs_len,
+            "inv_into": inv_into or _copy_into}
 
 
 PRECONDITIONERS = {
-    "none": _make_entry(lambda b, i: bytes(_as_bytes(b)), lambda b, i, n=None: bytes(_as_bytes(b))),
-    "shuffle": _make_entry(shuffle, lambda b, i, n=None: unshuffle(b, i)),
-    "bitshuffle": _make_entry(bitshuffle, bitunshuffle, needs_len=True),
-    "delta": _make_entry(delta_encode, lambda b, i, n=None: delta_decode(b, i)),
-    "zigzag": _make_entry(zigzag_encode, lambda b, i, n=None: zigzag_decode(b, i)),
+    "none": _make_entry(lambda b, i: bytes(_as_bytes(b)),
+                        lambda b, i, n=None: bytes(_as_bytes(b)),
+                        inv_into=_copy_into),
+    "shuffle": _make_entry(shuffle, lambda b, i, n=None: unshuffle(b, i),
+                           inv_into=unshuffle_into),
+    "bitshuffle": _make_entry(bitshuffle, bitunshuffle, needs_len=True,
+                              inv_into=bitunshuffle_into),
+    "delta": _make_entry(delta_encode, lambda b, i, n=None: delta_decode(b, i),
+                         inv_into=delta_decode_into),
+    "zigzag": _make_entry(zigzag_encode, lambda b, i, n=None: zigzag_decode(b, i),
+                          inv_into=zigzag_decode_into),
 }
 
 
@@ -212,21 +293,55 @@ def _parse(spec: str):
 
 
 def apply_precond(spec: str, buf) -> bytes:
-    out = bytes(_as_bytes(buf))
-    for name, itemsize in _parse(spec):
+    """Run the forward pipeline.  Accepts any buffer-protocol object and
+    defers the first copy to the first stage (each stage reads its input
+    through a zero-copy uint8 view); with no stages the input is only
+    materialized if it isn't ``bytes`` already."""
+    stages = _parse(spec)
+    if not stages:
+        return buf if isinstance(buf, bytes) else bytes(_as_bytes(buf))
+    out = buf
+    for name, itemsize in stages:
         out = PRECONDITIONERS[name]["fwd"](out, itemsize)
     return out
 
 
+def _needs_n(ent: dict, itemsize: int, orig_len: int | None) -> int | None:
+    if not ent["needs_len"] or orig_len is None:
+        return None
+    return orig_len - (orig_len % itemsize)
+
+
 def undo_precond(spec: str, buf, orig_len: int | None = None) -> bytes:
-    out = bytes(_as_bytes(buf))
-    for name, itemsize in reversed(_parse(spec)):
+    stages = _parse(spec)
+    if not stages:
+        return buf if isinstance(buf, bytes) else bytes(_as_bytes(buf))
+    out = buf
+    for name, itemsize in reversed(stages):
         ent = PRECONDITIONERS[name]
         if ent["needs_len"]:
-            n = None
-            if orig_len is not None:
-                n = orig_len - (orig_len % itemsize)
-            out = ent["inv"](out, itemsize, n)
+            out = ent["inv"](out, itemsize, _needs_n(ent, itemsize, orig_len))
         else:
             out = ent["inv"](out, itemsize)
     return out
+
+
+def undo_precond_into(spec: str, buf, out, orig_len: int | None = None) -> int:
+    """Invert the pipeline, writing the final stage directly into ``out``
+    (a writable buffer-protocol object).  Intermediate stages still
+    materialize (they are different lengths for bitshuffle), but the last
+    inverse — the one that used to feed ``b"".join`` — lands in place.
+    Returns the number of bytes written."""
+    stages = list(reversed(_parse(spec)))
+    if not stages:
+        return _copy_into(buf, 1, out)
+    cur = buf
+    for name, itemsize in stages[:-1]:
+        ent = PRECONDITIONERS[name]
+        if ent["needs_len"]:
+            cur = ent["inv"](cur, itemsize, _needs_n(ent, itemsize, orig_len))
+        else:
+            cur = ent["inv"](cur, itemsize)
+    name, itemsize = stages[-1]
+    ent = PRECONDITIONERS[name]
+    return ent["inv_into"](cur, itemsize, out, _needs_n(ent, itemsize, orig_len))

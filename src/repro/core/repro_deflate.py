@@ -84,9 +84,12 @@ def lz77_tokens(data: bytes, level: int = 5, mode: str = "cf",
     ``level``      : chain search depth (1 -> greedy, 9 -> deep)
     ``window_log`` : max match distance = 2^window_log (15=zlib, 18=zstd-ish)
     """
+    if not isinstance(data, (bytes, bytearray, memoryview)):
+        data = memoryview(data).cast("B")   # buffer-protocol input, zero-copy
     prefix = dict_prefix[-(1 << window_log):] if dict_prefix else b""
     plen = len(prefix)
-    buf = prefix + data
+    # concatenation only materializes when a prefix actually exists
+    buf = (prefix + bytes(data)) if plen else data
     src = np.frombuffer(buf, dtype=np.uint8)
     n = src.size
     out = bytearray()

@@ -9,7 +9,11 @@ Basket-granular task parallelism for the compression survey's container:
   an LRU decompressed-basket cache (the TTreeCache analogue);
 * :class:`~repro.io.merger.BufferMerger` / ``BasketBuffer`` — multi-producer
   single-file output without recompression (the TBufferMerger analogue),
-  plus :func:`~repro.io.merger.merge_files` fast file splicing.
+  plus :func:`~repro.io.merger.merge_files` fast file splicing;
+* :mod:`~repro.io.shmem` — shared-memory slab pool: the zero-pickle
+  transport behind the process-pool codecs (DESIGN.md §10);
+* :mod:`~repro.io.fdcache` — one cached fd per container path with
+  ``os.pread`` basket reads (no per-basket ``open(2)``).
 
 ``BasketWriter(workers=N)`` / ``BasketFile(prefetch=K)`` in
 ``repro.core.bfile`` delegate here, so existing call sites opt in with one

@@ -7,7 +7,7 @@ flushes, each basket becomes an independent compression task and the writer
 commits finished payloads in order.  This module is that mechanism:
 
 * ``CompressionEngine`` owns a bounded worker pool.  ``pack_stream`` takes
-  the (entry_start, entry_count, raw_bytes) chunk stream produced by
+  the (entry_start, entry_count, buffer) chunk stream produced by
   :func:`repro.core.basket.split_array`, compresses up to ``max_inflight``
   baskets concurrently, and yields ``(start, count, payload, meta)``
   strictly in submission order — so the caller writes at monotonically
@@ -23,10 +23,22 @@ commits finished payloads in order.  This module is that mechanism:
 * GIL routing: C-backed codecs (zlib, lzma, libzstd) release the GIL while
   compressing, so a thread pool scales them across cores.  The from-scratch
   pure-Python codecs (our lz4 block format and the repro-deflate family)
-  hold the GIL; for those the engine transparently uses a process pool —
-  tasks carry only (bytes, config fields), so they pickle cheaply and the
-  payloads come back bit-identical.  ``benchmarks/fig_parallel.py`` shows
-  both regimes as the paper-style cores-vs-throughput curve.
+  hold the GIL; for those the engine transparently uses a process pool.
+
+* Zero-copy transport: process-pool tasks move their buffers through a
+  ``multiprocessing.shared_memory`` slab pool (``repro.io.shmem``) instead
+  of pickled-bytes pipe round-trips — the parent memcpys the raw chunk
+  into a pre-mapped slab, the worker compresses in place and writes the
+  payload back over the same slab, and only slab names and lengths cross
+  the pipe.  Falls back to the pickle transport when shared memory is
+  unavailable (``shm=False`` forces the fallback).  Output bytes are
+  identical either way.
+
+Payload lifetime: ``pack_stream`` may yield payloads that are memoryviews
+(into a slab, or into the caller's own source array on the serial identity
+path).  They are valid until the generator is advanced or closed; consumers
+that retain payloads must ``bytes()`` them (``BasketWriter`` writes them to
+disk immediately; ``BasketBuffer`` copies).
 
 The engine is shared: one instance can serve many branches, many writers,
 and the prefetching reader (``repro.io.prefetch``) simultaneously.
@@ -34,19 +46,28 @@ and the prefetching reader (``repro.io.prefetch``) simultaneously.
 
 from __future__ import annotations
 
+import logging
 import multiprocessing as mp
 import os
 import sys
 import threading
 import time
 from collections import deque
-from concurrent.futures import Executor, Future, ProcessPoolExecutor, ThreadPoolExecutor
+from concurrent.futures import (CancelledError, Executor, Future,
+                                ProcessPoolExecutor, ThreadPoolExecutor)
 from typing import Iterable, Iterator, Optional
+
+import numpy as np
 
 from repro.core import basket as _basket
 from repro.core import codec as _codec
 
+from . import fdcache as _fdcache
+from . import shmem as _shmem
+
 __all__ = ["CompressionEngine", "cpu_count"]
+
+_LOG = logging.getLogger("repro.io")
 
 
 def cpu_count() -> int:
@@ -57,24 +78,63 @@ def cpu_count() -> int:
 # module-level task bodies (picklable, so the process backend can run them)
 # ---------------------------------------------------------------------------
 
-def _pack_task(raw: bytes, cfg_fields: tuple, start: int, count: int):
+def _pack_task(raw, cfg_fields: tuple, start: int, count: int):
     cfg = _codec.CompressionConfig(*cfg_fields)
     payload, meta = _basket.pack_basket(raw, cfg, entry_start=start,
                                         entry_count=count)
     return start, count, payload, meta
 
 
+def _pack_task_shm(slab_name: str, nbytes: int, cfg_fields: tuple,
+                   start: int, count: int):
+    """Worker body for the slab transport: input read in place from the
+    slab, payload written back over it (the input is dead by then).  The
+    return value carries only the payload *length* — or the payload bytes
+    themselves if they outgrew the slab (incompressible + header margin
+    exceeded), which the parent handles transparently."""
+    raw = _shmem.attach_view(slab_name, nbytes)
+    cfg = _codec.CompressionConfig(*cfg_fields)
+    payload, meta = _basket.pack_basket(raw, cfg, entry_start=start,
+                                        entry_count=count)
+    if payload is raw:          # identity config: content already in place
+        return start, count, nbytes, meta
+    n = _shmem.write_back(slab_name, payload)
+    if n is None:
+        return start, count, bytes(payload), meta
+    return start, count, n, meta
+
+
 def _unpack_task(path: str, offset: int, meta_json: dict,
                  dictionary: Optional[bytes], verify: bool) -> bytes:
     meta = _basket.BasketMeta.from_json(meta_json)
-    with open(path, "rb") as f:
-        f.seek(offset)
-        payload = f.read(meta.comp_len)
+    payload = _fdcache.pread(path, offset, meta.comp_len)
     return _basket.unpack_basket(payload, meta, dictionary, verify=verify)
+
+
+def _unpack_task_into(path: str, offset: int, meta_json: dict,
+                      dictionary: Optional[bytes], verify: bool, out) -> int:
+    """Read + decompress one basket directly into ``out`` (same-process
+    destination slice — the thread-pool / serial scatter path)."""
+    meta = _basket.BasketMeta.from_json(meta_json)
+    payload = _fdcache.pread(path, offset, meta.comp_len)
+    return _basket.unpack_basket_into(payload, meta, out, dictionary,
+                                      verify=verify)
+
+
+def _unpack_task_shm(path: str, offset: int, meta_json: dict,
+                     dictionary: Optional[bytes], verify: bool,
+                     slab_name: str):
+    """Worker body: decode into the slab; only the length crosses back."""
+    raw = _unpack_task(path, offset, meta_json, dictionary, verify)
+    n = _shmem.write_back(slab_name, raw)
+    return raw if n is None else n
 
 
 def _cfg_fields(cfg: _codec.CompressionConfig) -> tuple:
     return (cfg.algo, cfg.level, cfg.precond, cfg.dictionary)
+
+
+_buf_len = _basket._nbytes      # byte length of any buffer-protocol object
 
 
 def _warm_task(delay: float = 0.0):
@@ -116,11 +176,17 @@ class CompressionEngine:
     ``workers=0`` degrades to fully serial execution (no pool, no threads),
     which is what makes ``BasketWriter(workers=0)`` bit-for-bit the old
     serial writer with zero overhead.
+
+    ``shm`` controls the process-pool transport: ``"auto"`` (default) uses
+    the shared-memory slab pool when the platform supports it, ``False``
+    forces the pickled-bytes fallback, ``True`` insists (still falling back
+    with a warning if shared memory is unavailable).
     """
 
     def __init__(self, workers: int = 0, max_inflight: Optional[int] = None,
                  unpack_processes: bool = False,
-                 inline_bytes: int = 16384):
+                 inline_bytes: int = 16384,
+                 shm="auto"):
         self.workers = max(int(workers), 0)
         self.max_inflight = max_inflight or max(2 * self.workers, 1)
         # Decompression defaults to the thread pool even for pure-Python
@@ -134,8 +200,10 @@ class CompressionEngine:
         # where process-pool pickling/IPC pays for itself moved up — a
         # 16 KiB basket now compresses in well under the round-trip cost.
         self.inline_bytes = max(int(inline_bytes), 0)
+        self.shm = shm
         self._thread_pool: Optional[ThreadPoolExecutor] = None
         self._proc_pool: Optional[ProcessPoolExecutor] = None
+        self._slab_pool: Optional[_shmem.SlabPool] = None
         self._lock = threading.Lock()
         self._closed = False
 
@@ -156,6 +224,24 @@ class CompressionEngine:
                 self._thread_pool = ThreadPoolExecutor(
                     self.workers, thread_name_prefix="repro-io")
             return self._thread_pool
+
+    def _slabs(self) -> Optional[_shmem.SlabPool]:
+        """The slab pool serving the process transport (None = pickle)."""
+        if self.shm is False:
+            return None
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            if self._slab_pool is None:
+                if not _shmem.available():
+                    if self.shm is True:
+                        _LOG.warning("shared memory unavailable; "
+                                     "falling back to pickle transport")
+                    self.shm = False
+                    return None
+                self._slab_pool = _shmem.SlabPool(
+                    max_outstanding=4 * self.workers + 8)
+            return self._slab_pool
 
     def _spawn_process_pool(self) -> ProcessPoolExecutor:
         """Pool for GIL-holding codecs, started so it can never run user
@@ -216,8 +302,11 @@ class CompressionEngine:
             self._closed = True
             pools = [p for p in (self._thread_pool, self._proc_pool) if p]
             self._thread_pool = self._proc_pool = None
+            slab_pool, self._slab_pool = self._slab_pool, None
         for p in pools:
             p.shutdown(wait=True)
+        if slab_pool is not None:   # after shutdown: no worker still maps them
+            slab_pool.close()
 
     def __enter__(self):
         return self
@@ -226,6 +315,21 @@ class CompressionEngine:
         self.close()
 
     # -- ordered map (the pipeline primitive) ----------------------------
+
+    @staticmethod
+    def _drain(fut: Future) -> None:
+        """Cancel a pending future; if it is already running, wait it out
+        and surface (log) its exception — a failing worker must not die
+        silently just because the consumer closed the stream early."""
+        if fut.cancel():
+            return
+        try:
+            exc = fut.exception()
+        except CancelledError:  # pragma: no cover - raced cancellation
+            return
+        if exc is not None:
+            _LOG.warning("repro.io worker failed during pipeline teardown: %r",
+                         exc)
 
     def _map_ordered(self, pool: Optional[Executor], submit_one,
                      items: Iterable) -> Iterator:
@@ -254,29 +358,99 @@ class CompressionEngine:
                     yield pending.popleft().result()
         finally:
             for f in pending:
-                f.cancel()
+                self._drain(f)
 
     # -- compression side ------------------------------------------------
 
     def pack_stream(self, chunks: Iterable[tuple[int, int, bytes]],
                     cfg: _codec.CompressionConfig) -> Iterator[tuple]:
-        """(start, count, raw) stream -> (start, count, payload, meta)
-        stream, in order, compressed ``workers``-wide."""
+        """(start, count, buffer) stream -> (start, count, payload, meta)
+        stream, in order, compressed ``workers``-wide.  Input buffers may
+        be any buffer-protocol object; yielded payloads are bytes-like and
+        valid until the next iteration (copy if retained)."""
         pool = self._pool_for(cfg.algo if cfg.enabled else "none")
         fields = _cfg_fields(cfg)
+        if isinstance(pool, ProcessPoolExecutor):
+            slabs = self._slabs()
+            if slabs is not None:
+                return self._pack_stream_shm(pool, slabs, chunks, fields)
         inline = self.inline_bytes
 
         def submit_one(p, chunk):
             start, count, raw = chunk
             if p is None:
                 return _pack_task(raw, fields, start, count)
-            if len(raw) < inline:
+            if _buf_len(raw) < inline:
                 # small basket: the pool round-trip (pickle + IPC + wakeup)
                 # costs more than compressing right here
                 return _completed_future(_pack_task, raw, fields, start, count)
+            if isinstance(p, ProcessPoolExecutor) and \
+                    not isinstance(raw, (bytes, bytearray)):
+                raw = bytes(raw)    # pickle transport needs a real object
             return p.submit(_pack_task, raw, fields, start, count)
 
         return self._map_ordered(pool, submit_one, chunks)
+
+    def _pack_stream_shm(self, pool: ProcessPoolExecutor,
+                         slabs: _shmem.SlabPool,
+                         chunks: Iterable, fields: tuple) -> Iterator[tuple]:
+        """pack_stream over the slab transport: same ordered-commit loop,
+        but each in-flight basket owns a slab carrying raw input out and
+        the payload back.  Yielded payloads may view the slab — the slab is
+        recycled when the generator is advanced."""
+        pending: deque = deque()    # (future, slab | None)
+        it = iter(chunks)
+        exhausted = False
+        inline = self.inline_bytes
+        try:
+            while pending or not exhausted:
+                while not exhausted and len(pending) < self.max_inflight:
+                    try:
+                        start, count, raw = next(it)
+                    except StopIteration:
+                        exhausted = True
+                        break
+                    n = _buf_len(raw)
+                    if n < inline:
+                        pending.append((_completed_future(
+                            _pack_task, raw, fields, start, count), None))
+                        continue
+                    slab = slabs.acquire(n)
+                    try:
+                        slab.fill(raw)
+                        fut = pool.submit(_pack_task_shm, slab.name, n,
+                                          fields, start, count)
+                    except BaseException:
+                        slabs.release(slab)
+                        raise
+                    pending.append((fut, slab))
+                if pending:
+                    fut, slab = pending.popleft()
+                    try:
+                        start, count, payload, meta = fut.result()
+                    except BaseException:
+                        if slab is not None:
+                            slabs.release(slab)
+                        raise
+                    if slab is None:
+                        yield start, count, payload, meta
+                        continue
+                    try:
+                        if isinstance(payload, int):
+                            view = slab.view(payload)
+                            try:
+                                yield start, count, view, meta
+                            finally:
+                                view.release()
+                        else:   # payload outgrew the slab: came back pickled
+                            yield start, count, payload, meta
+                    finally:
+                        slabs.release(slab)
+        finally:
+            for fut, slab in pending:
+                self._drain(fut)
+                if slab is not None:
+                    slabs.release(slab)
 
     # -- decompression side (used by the prefetching reader) -------------
 
@@ -288,5 +462,104 @@ class CompressionEngine:
         if pool is None:
             return _completed_future(_unpack_task, path, offset, meta_json,
                                      dictionary, verify)
+        if pool is self._proc_pool:
+            slabs = self._slabs()
+            if slabs is not None:
+                return self._submit_unpack_shm(pool, slabs, path, offset,
+                                               meta_json, dictionary, verify)
         return pool.submit(_unpack_task, path, offset, meta_json,
                            dictionary, verify)
+
+    @staticmethod
+    def _submit_unpack_shm(pool, slabs, path, offset, meta_json,
+                           dictionary, verify) -> Future:
+        """Process unpack over the slab transport: the worker decodes into
+        a slab; the parent's completion callback lifts the bytes out (one
+        memcpy instead of a pickled pipe round-trip) and recycles it.
+        Falls back to the pickle transport when the pool's outstanding-slab
+        cap is hit (a reader scheduling a whole branch at once must not map
+        the whole branch in slabs)."""
+        slab = slabs.try_acquire(int(meta_json["orig_len"]))
+        if slab is None:
+            return pool.submit(_unpack_task, path, offset, meta_json,
+                               dictionary, verify)
+        try:
+            inner = pool.submit(_unpack_task_shm, path, offset, meta_json,
+                                dictionary, verify, slab.name)
+        except BaseException:
+            slabs.release(slab)
+            raise
+        outer: Future = Future()
+
+        def _done(f: Future) -> None:
+            try:
+                res = f.result()
+                data = bytes(slab.view(res)) if isinstance(res, int) else res
+            except BaseException as e:
+                slabs.release(slab)
+                outer.set_exception(e)
+                return
+            slabs.release(slab)
+            outer.set_result(data)
+
+        inner.add_done_callback(_done)
+        return outer
+
+    def submit_unpack_into(self, path: str, offset: int, meta_json: dict,
+                           dictionary: Optional[bytes], verify: bool,
+                           out) -> Future:
+        """Schedule one basket's read+decompress **into** ``out`` (a
+        writable 1-D uint8 view of the destination array slice); returns a
+        Future[int] of bytes written.  Thread/serial workers decode in
+        place; process workers decode remotely and the completion callback
+        memcpys into ``out``."""
+        algo = meta_json.get("algo", "none") if self.unpack_processes else "none"
+        pool = self._pool_for(algo)
+        if pool is None:
+            return _completed_future(_unpack_task_into, path, offset,
+                                     meta_json, dictionary, verify, out)
+        if pool is self._proc_pool:
+            slabs = self._slabs()
+            slab = slabs.try_acquire(int(meta_json["orig_len"])) \
+                if slabs is not None else None
+            try:
+                if slab is not None:
+                    # decode lands in the slab; scatter it straight into
+                    # the destination slice — one memcpy, no intermediate
+                    inner = pool.submit(_unpack_task_shm, path, offset,
+                                        meta_json, dictionary, verify,
+                                        slab.name)
+                else:
+                    inner = pool.submit(_unpack_task, path, offset,
+                                        meta_json, dictionary, verify)
+            except BaseException:
+                if slab is not None:
+                    slabs.release(slab)
+                raise
+            outer: Future = Future()
+
+            def _done(f: Future) -> None:
+                try:
+                    res = f.result()
+                    if isinstance(res, int):
+                        view = slab.view(res)
+                        out[:res] = np.frombuffer(view, dtype=np.uint8)
+                        view.release()
+                        n = res
+                    else:
+                        src = np.frombuffer(res, dtype=np.uint8)
+                        out[:src.size] = src
+                        n = src.size
+                except BaseException as e:
+                    if slab is not None:
+                        slabs.release(slab)
+                    outer.set_exception(e)
+                    return
+                if slab is not None:
+                    slabs.release(slab)
+                outer.set_result(n)
+
+            inner.add_done_callback(_done)
+            return outer
+        return pool.submit(_unpack_task_into, path, offset, meta_json,
+                           dictionary, verify, out)

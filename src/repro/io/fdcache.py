@@ -1,0 +1,126 @@
+"""Cached positional reads — one fd per path, ``os.pread`` per basket.
+
+The parallel unpack path used to ``open()``/``close()`` the container once
+per basket, so a 64-worker decompress fan-out serialized on path resolution
+and the dentry lock.  Here every (process, path) pair holds a single O_RDONLY
+fd and baskets are read with ``os.pread`` — positional, thread-safe, no
+seek state shared between workers.
+
+Staleness: BasketFiles are written tmp-then-``os.replace``d, so a path can
+start pointing at a *new* inode while a cached fd still references the old
+one.  Each cache hit revalidates with one ``stat``: if the path's
+(st_dev, st_ino) no longer matches the fd's, the fd is reopened.  That is
+one cheap syscall versus the open+close pair (plus fd-table churn) it
+replaces — and unlike an ``st_nlink`` probe it also holds on overlayfs,
+where unlinked-but-open inodes keep reporting a link.
+
+Reads *check out* their entry (a refcount taken under the lock), so LRU
+eviction or ``invalidate()`` on another thread can only mark an in-use fd
+dead — it is closed by the last reader checking it back in, never while a
+``pread`` may still be using (or worse, a fresh ``open`` reusing) that fd
+number.
+
+The cache is per-process module state (process-pool workers each get their
+own copy) and holds at most ``_MAX_FDS`` descriptors, evicted LRU.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from collections import OrderedDict
+
+__all__ = ["pread", "invalidate", "clear"]
+
+_MAX_FDS = 64
+
+_lock = threading.Lock()
+
+
+class _Entry:
+    __slots__ = ("fd", "ident", "refs", "dead")
+
+    def __init__(self, fd: int, ident: tuple):
+        self.fd = fd
+        self.ident = ident
+        self.refs = 0
+        self.dead = False
+
+
+_entries: "OrderedDict[str, _Entry]" = OrderedDict()
+
+
+def _close_quietly(fd: int) -> None:
+    try:
+        os.close(fd)
+    except OSError:
+        pass
+
+
+def _retire(e: _Entry) -> None:
+    """Mark dead; close now only if no reader holds it (the last reader
+    closes it in ``_checkin`` otherwise).  Call with the lock held."""
+    if not e.dead:
+        e.dead = True
+        if e.refs == 0:
+            _close_quietly(e.fd)
+
+
+def _checkout(path: str) -> _Entry:
+    with _lock:
+        e = _entries.get(path)
+        if e is not None:
+            try:
+                st = os.stat(path)
+                fresh = (st.st_dev, st.st_ino) == e.ident
+            except OSError:
+                fresh = False
+            if fresh:
+                _entries.move_to_end(path)
+                e.refs += 1
+                return e
+            _entries.pop(path, None)
+            _retire(e)
+        fd = os.open(path, os.O_RDONLY)
+        st = os.fstat(fd)
+        e = _Entry(fd, (st.st_dev, st.st_ino))
+        e.refs = 1
+        _entries[path] = e
+        while len(_entries) > _MAX_FDS:
+            _, old = _entries.popitem(last=False)
+            _retire(old)
+        return e
+
+
+def _checkin(e: _Entry) -> None:
+    with _lock:
+        e.refs -= 1
+        if e.dead and e.refs == 0:
+            _close_quietly(e.fd)
+
+
+def pread(path: str, offset: int, n: int) -> bytes:
+    """Read ``n`` bytes at ``offset`` through the per-path cached fd."""
+    e = _checkout(path)
+    try:
+        buf = os.pread(e.fd, n, offset)
+    finally:
+        _checkin(e)
+    if len(buf) != n:
+        raise EOFError(f"{path}: short read at {offset}: {len(buf)} < {n}")
+    return buf
+
+
+def invalidate(path: str) -> None:
+    with _lock:
+        e = _entries.pop(path, None)
+        if e is not None:
+            _retire(e)
+
+
+def clear() -> None:
+    with _lock:
+        entries = list(_entries.values())
+        _entries.clear()
+        for e in entries:
+            _retire(e)

@@ -52,20 +52,31 @@ class BasketBuffer:
     def write_branch(self, name: str, arr: np.ndarray,
                      cfg: Optional[CompressionConfig] = None,
                      target_basket_bytes: int = 1 << 20) -> dict:
+        arr = np.asarray(arr)
+        return self.write_branch_chunks(
+            name, dtype=arr.dtype.str, shape=arr.shape,
+            chunks=split_array(arr, target_basket_bytes), cfg=cfg)
+
+    def write_branch_chunks(self, name: str, *, dtype, shape, chunks,
+                            cfg: Optional[CompressionConfig] = None) -> dict:
+        """Buffer a branch from a ``(entry_start, entry_count, buffer)``
+        chunk stream (the producers>1 checkpoint staging path)."""
         if name in self._branches:
             raise ValueError(f"branch {name!r} already buffered")
         cfg = cfg or CompressionConfig()
-        arr = np.asarray(arr)
-        chunks = split_array(arr, target_basket_bytes)
         # CompressionEngine(0) is the serial path — no pools, same stream
         packed = (self._engine or CompressionEngine(0)).pack_stream(chunks, cfg)
         payloads, baskets = [], []
         for _start, _count, payload, meta in packed:
-            payloads.append(payload)
+            # pack_stream payloads are only valid until the next iteration
+            # (slab transport / zero-copy identity path) — the buffer
+            # retains them, so it must own the bytes
+            payloads.append(payload if isinstance(payload, bytes)
+                            else bytes(payload))
             baskets.append({"meta": meta.to_json()})
         entry = {
-            "dtype": arr.dtype.str,
-            "shape": list(arr.shape),
+            "dtype": np.dtype(dtype).str,
+            "shape": list(shape),
             "config": {"algo": cfg.algo, "level": cfg.level,
                        "precond": cfg.precond},
             "dictionary": base64.b64encode(cfg.dictionary).decode()

@@ -28,7 +28,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.basket import BasketMeta
+from repro.core.basket import BasketMeta, byte_offsets
 
 from .engine import CompressionEngine
 
@@ -128,31 +128,80 @@ class PrefetchReader:
                 if m.entry_start + m.entry_count > start
                 and m.entry_start < stop]
 
+    @staticmethod
+    def _scatter(flat: np.ndarray, pos: int, chunk) -> int:
+        b = np.frombuffer(chunk, dtype=np.uint8)
+        flat[pos:pos + b.size] = b
+        return b.size
+
     def read_entries(self, start: int, stop: int) -> np.ndarray:
         """Row range [start, stop); decompresses covering baskets in
-        parallel and read-ahead schedules the ``ahead`` baskets after."""
+        parallel and read-ahead schedules the ``ahead`` baskets after.
+        The covering rows are allocated once and each basket lands in its
+        slice — no ``b"".join`` rematerialization."""
         idxs = self._covering(start, stop)
         if not idxs:
             return np.zeros((0,) + self.shape[1:], dtype=self.dtype)
         futs = self._acquire(idxs)
         self.prefetch(range(idxs[-1] + 1, idxs[-1] + 1 + self.ahead))
-        chunks = [f.result() for f in futs]
+        total = sum(self._metas[i].orig_len for i in idxs)
+        row_elems = int(np.prod(self.shape[1:], dtype=np.int64)) or 1
+        rows = total // (self.dtype.itemsize * row_elems)
+        arr = np.empty((rows,) + self.shape[1:], dtype=self.dtype)
+        flat = arr.reshape(-1).view(np.uint8)
+        pos = 0
+        for f in futs:
+            pos += self._scatter(flat, pos, f.result())
         self._trim()
         first_entry = self._metas[idxs[0]].entry_start
-        buf = b"".join(chunks)
-        row_elems = int(np.prod(self.shape[1:], dtype=np.int64)) or 1
-        rows = len(buf) // (self.dtype.itemsize * row_elems)
-        arr = np.frombuffer(buf, dtype=self.dtype).reshape(
-            (rows,) + self.shape[1:])
         return arr[start - first_entry: stop - first_entry].copy()
 
     def read_all(self) -> np.ndarray:
-        """Whole branch: every basket scheduled at once, joined in order."""
-        futs = self._acquire(range(len(self._metas)))
-        chunks = [f.result() for f in futs]
+        """Whole branch: every basket scheduled at once, scattered in order
+        into one destination allocation.
+
+        Baskets already in the cache (or mid-decompression from an earlier
+        prefetch) are consumed from their futures; the rest are submitted
+        as decode-**into** tasks targeting the destination slice directly —
+        those bypass the cache (their result is a byte count, not reusable
+        bytes), which is the right trade for a bulk scan that would blow
+        the LRU anyway."""
+        out = np.empty(self.shape, dtype=self.dtype)
+        flat = out.reshape(-1).view(np.uint8)
+        offs, pos = byte_offsets(m.orig_len for m in self._metas)
+        if pos != out.nbytes:   # malformed TOC; keep the copying fallback
+            futs = self._acquire(range(len(self._metas)))
+            chunks = [f.result() for f in futs]
+            self._trim()
+            buf = b"".join(bytes(c) for c in chunks)
+            return np.frombuffer(buf, dtype=self.dtype).reshape(self.shape).copy()
+        # classify under the lock; submit (and, for a serial engine,
+        # *execute*) outside it — a multi-GB scan must not stall other
+        # threads sharing this reader.  A basket cached by a concurrent
+        # thread between the two phases just decodes twice (same bytes,
+        # disjoint destinations), never corrupts.
+        cached_tasks, missing = [], []
+        with self._lock:
+            for i in range(len(self._metas)):
+                fut = self._cache.get(i)
+                if fut is not None:
+                    self.hits += 1
+                    self._cache.move_to_end(i)
+                    cached_tasks.append((i, fut))
+                else:
+                    self.misses += 1
+                    missing.append(i)
+        into_futs = [self._engine.submit_unpack_into(
+            self.path, self._offsets[i], self._meta_json[i],
+            self._dictionary, self.verify,
+            flat[offs[i]:offs[i] + self._metas[i].orig_len])
+            for i in missing]
+        for i, fut in cached_tasks:
+            self._scatter(flat, offs[i], fut.result())
+        for fut in into_futs:
+            fut.result()
         self._trim()
-        buf = b"".join(chunks)
-        return np.frombuffer(buf, dtype=self.dtype).reshape(self.shape).copy()
+        return out
 
     # -- lifecycle -------------------------------------------------------
 

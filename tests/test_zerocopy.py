@@ -1,0 +1,537 @@
+"""Zero-copy data plane (PR 3): decompress-into roundtrips, golden
+byte-identity regressions, shm slab transport, fd cache, streamed
+checkpoint staging."""
+
+import hashlib
+import json
+import logging
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig
+from repro.core.basket import (BasketMeta, basket_rows, join_baskets,
+                               pack_basket, split_array, unpack_basket,
+                               unpack_basket_into)
+from repro.core.bfile import BasketFile, BasketWriter, write_arrays
+from repro.io.engine import CompressionEngine
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+
+PRECONDS = ["none", "shuffle4", "bitshuffle4", "bitshuffle2", "delta4",
+            "zigzag8", "delta8+shuffle8", "delta4+bitshuffle4"]
+ALGOS = [("none", 0), ("zlib", 5), ("lz4", 1), ("zstd", 3),
+         ("repro-deflate", 5)]
+
+
+# ---------------------------------------------------------------------------
+# decompress-into: every precond × codec, exact/oversized/misaligned outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,level", ALGOS)
+@pytest.mark.parametrize("precond", PRECONDS)
+def test_unpack_into_matrix(rng, algo, level, precond):
+    for size in (0, 1, 7, 4096, 10_007):
+        data = rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+        cfg = CompressionConfig(algo, level, precond)
+        payload, meta = pack_basket(data, cfg)
+        payload = bytes(payload)
+        assert unpack_basket(payload, meta) == data
+        # exact-size ndarray destination
+        out = np.empty(size, np.uint8)
+        assert unpack_basket_into(payload, meta, out) == size
+        assert out.tobytes() == data
+        # oversized + misaligned memoryview destination
+        big = bytearray(size + 11)
+        mv = memoryview(big)[3:3 + size]
+        unpack_basket_into(payload, meta, mv)
+        assert bytes(mv) == data
+        assert bytes(big[:3]) == b"\x00" * 3 and bytes(big[3 + size:]) == b"\x00" * 8
+
+
+def test_unpack_into_rejects_noncontiguous(rng):
+    """A strided destination would make reshape(-1) copy and silently
+    orphan the decode — must be rejected, not half-honored."""
+    data = rng.integers(0, 256, 140, dtype=np.uint8).tobytes()[:140]
+    payload, meta = pack_basket(data[:140], CompressionConfig("none", 0, "none"))
+    out = np.zeros((70, 4), np.uint8)[:, :2]        # non-contiguous, 140 B
+    with pytest.raises(ValueError, match="contiguous"):
+        unpack_basket_into(bytes(payload), meta, out)
+    from repro.core.precond import undo_precond_into
+    with pytest.raises(ValueError, match="contiguous"):
+        undo_precond_into("shuffle4", data, out, len(data))
+
+
+def test_unpack_into_too_small_and_readonly(rng):
+    data = rng.integers(0, 256, 1000, dtype=np.uint8).tobytes()
+    payload, meta = pack_basket(data, CompressionConfig("zlib", 5, "shuffle4"))
+    with pytest.raises(ValueError, match="too small"):
+        unpack_basket_into(bytes(payload), meta, bytearray(999))
+    with pytest.raises(ValueError, match="read-only"):
+        unpack_basket_into(bytes(payload), meta, memoryview(bytes(1000)))
+
+
+def test_unpack_into_verifies_checksum(rng):
+    data = rng.integers(0, 256, 1000, dtype=np.uint8).tobytes()
+    payload, meta = pack_basket(data, CompressionConfig("none", 0, "none"))
+    bad = bytearray(bytes(payload))
+    bad[500] ^= 0xFF
+    with pytest.raises(ValueError, match="checksum"):
+        unpack_basket_into(bytes(bad), meta, bytearray(1000))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.binary(min_size=0, max_size=5000),
+       st.sampled_from(PRECONDS),
+       st.sampled_from(ALGOS),
+       st.integers(min_value=0, max_value=7))
+def test_unpack_into_fuzz(data, precond, algo_level, pad):
+    algo, level = algo_level
+    payload, meta = pack_basket(data, CompressionConfig(algo, level, precond))
+    big = bytearray(len(data) + pad + 5)
+    mv = memoryview(big)[pad:pad + len(data)]
+    unpack_basket_into(bytes(payload), meta, mv)
+    assert bytes(mv) == data
+
+
+# ---------------------------------------------------------------------------
+# buffer-protocol pack path + zero-copy split
+# ---------------------------------------------------------------------------
+
+def test_pack_accepts_buffer_protocol(rng):
+    data = rng.integers(0, 256, 9999, dtype=np.uint8).tobytes()
+    arr = np.frombuffer(data, np.uint8)
+    for algo, level in ALGOS:
+        cfg = CompressionConfig(algo, level, "shuffle4")
+        pb, mb = pack_basket(data, cfg)
+        pv, mv_ = pack_basket(memoryview(arr), cfg)
+        pa, ma = pack_basket(arr, cfg)
+        assert bytes(pb) == bytes(pv) == bytes(pa)
+        assert mb == mv_ == ma
+
+
+def test_split_array_yields_views(rng):
+    arr = rng.standard_normal((1000, 3)).astype(np.float32)
+    parts = list(split_array(arr, target_basket_bytes=4096))
+    assert len(parts) > 1
+    assert sum(c for _, c, _ in parts) == 1000
+    # chunks are zero-copy views of the source array's memory
+    total = 0
+    for start, count, buf in parts:
+        assert isinstance(buf, memoryview)
+        total += buf.nbytes
+        assert bytes(buf) == arr[start:start + count].tobytes()
+    assert total == arr.nbytes
+
+
+def test_basket_rows_matches_split_array(rng):
+    for shape, dt in [((1000, 3), np.float32), ((17,), np.int64),
+                      ((5, 4096), np.uint8), ((100000,), np.float64)]:
+        arr = np.zeros(shape, dt)
+        for target in (4096, 1 << 16, 1 << 20):
+            parts = list(split_array(arr, target))
+            rows = basket_rows(shape, np.dtype(dt).itemsize, target)
+            assert parts[0][1] == min(rows, shape[0])
+
+
+def test_join_baskets_single_allocation_parity(rng):
+    arr = rng.integers(0, 1000, (500, 4)).astype(np.int32)
+    parts = [bytes(c) for _, _, c in split_array(arr, 2048)]
+    out = join_baskets(parts, arr.dtype.str, arr.shape)
+    np.testing.assert_array_equal(out, arr)
+    with pytest.raises(ValueError):
+        join_baskets(parts[:-1], arr.dtype.str, arr.shape)
+
+
+# ---------------------------------------------------------------------------
+# golden regressions: bytes written before this PR must be reproduced
+# exactly, and must decode unchanged through the new read plane
+# ---------------------------------------------------------------------------
+
+def _golden_tree(rng):
+    f = rng.standard_normal(40_000).astype(np.float32)
+    off = np.cumsum(rng.integers(1, 9, 30_000)).astype(np.int64)
+    tok = rng.integers(0, 255, 50_000).astype(np.uint8)
+    return f, off, tok
+
+
+def test_golden_container_byte_identical(tmp_path):
+    """The exact write calls that produced tests/golden/container_pr2.bskt
+    (PR 2 tree) must still produce those bytes."""
+    man = json.load(open(os.path.join(GOLDEN, "container_manifest.json")))
+    rng = np.random.default_rng(42)
+    f, off, tok = _golden_tree(rng)
+    p = str(tmp_path / "c.bskt")
+    with BasketWriter(p) as w:
+        w.write_branch("f", f, CompressionConfig("lz4", 1, "bitshuffle4"), 32 * 1024)
+        w.write_branch("off", off, CompressionConfig("repro-deflate", 5, "delta8+shuffle8"), 64 * 1024)
+        w.write_branch("tok", tok, CompressionConfig("lz4", 6, "none"), 16 * 1024)
+        w.write_branch("scalar", np.float64(3.25), CompressionConfig("none", 0, "none"))
+        w.write_branch("empty", np.zeros((0, 3), np.int32), CompressionConfig("lz4", 1, "shuffle4"))
+    blob = open(p, "rb").read()
+    assert hashlib.sha256(blob).hexdigest() == man["container_pr2.bskt"]
+    assert blob == open(os.path.join(GOLDEN, "container_pr2.bskt"), "rb").read()
+
+
+def test_golden_container_decodes(tmp_path):
+    rng = np.random.default_rng(42)
+    f, off, tok = _golden_tree(rng)
+    with BasketFile(os.path.join(GOLDEN, "container_pr2.bskt")) as g:
+        np.testing.assert_array_equal(g.read_branch("f"), f)
+        np.testing.assert_array_equal(g.read_branch("off", workers=4), off)
+        np.testing.assert_array_equal(g.read_branch("tok"), tok)
+        assert g.read_branch("scalar") == np.float64(3.25)
+        assert g.read_branch("empty").shape == (0, 3)
+    with BasketFile(os.path.join(GOLDEN, "container_pr2.bskt"),
+                    workers=2, prefetch=4) as g:
+        np.testing.assert_array_equal(g.read_branch("off"), off)
+
+
+def test_golden_ckpt_byte_identical_all_modes(tmp_path):
+    """producers=1 checkpoint bytes: gather and stream staging, serial and
+    parallel workers, must all equal the PR 2 golden."""
+    from repro.checkpoint import save_pytree
+    man = json.load(open(os.path.join(GOLDEN, "container_manifest.json")))
+    rng = np.random.default_rng(42)
+    _golden_tree(rng)   # advance the stream exactly as the generator did
+    tree = {"w": rng.standard_normal((300, 257)).astype(np.float32),
+            "emb": {"table": rng.integers(0, 1 << 20, 70_000).astype(np.int64)},
+            "step": np.int64(123)}
+    for staging in ("gather", "stream"):
+        for workers in (0, 4):
+            p = str(tmp_path / f"{staging}{workers}.bskt")
+            save_pytree(p, tree, profile="analysis", workers=workers,
+                        staging=staging)
+            h = hashlib.sha256(open(p, "rb").read()).hexdigest()
+            assert h == man["ckpt_pr2.bskt"], (staging, workers)
+
+
+def test_golden_codec_blobs_decode_into():
+    """The PR-1-era codec blobs under tests/golden/ must decode through the
+    decompress-into path as well."""
+    from golden_payloads import payloads
+    man = json.load(open(os.path.join(GOLDEN, "manifest.json")))
+    pay = payloads()
+    checked = 0
+    for name, meta in man.items():
+        if meta.get("kind") not in ("lz4", "codec") or meta.get("dict") \
+                or "dict" in name:
+            continue
+        blob = open(os.path.join(GOLDEN, name + ".bin"), "rb").read()
+        data = pay[meta["payload"]]
+        algo = meta.get("algo", "lz4")
+        precond = meta.get("precond", "none")
+        from repro.core.precond import apply_precond
+        stored = apply_precond(precond, data) if precond != "none" else data
+        bm = BasketMeta(algo=algo, level=meta.get("level", 1), precond=precond,
+                        orig_len=len(data), stored_len=len(stored),
+                        comp_len=len(blob),
+                        checksum=__import__("zlib").adler32(data) & 0xFFFFFFFF)
+        out = bytearray(len(data) + 3)
+        mv = memoryview(out)[1:1 + len(data)]
+        unpack_basket_into(blob, bm, mv)
+        assert bytes(mv) == data
+        checked += 1
+    assert checked >= 5
+
+
+# ---------------------------------------------------------------------------
+# fd cache
+# ---------------------------------------------------------------------------
+
+def test_fdcache_pread_and_replace(tmp_path):
+    from repro.io import fdcache
+    p = str(tmp_path / "f.bin")
+    open(p, "wb").write(b"A" * 100)
+    assert fdcache.pread(p, 10, 5) == b"AAAAA"
+    # replace the file (what BasketWriter's atomic commit does): the cached
+    # fd points at the unlinked inode and must be revalidated
+    tmp = p + ".tmp"
+    open(tmp, "wb").write(b"B" * 100)
+    os.replace(tmp, p)
+    assert fdcache.pread(p, 10, 5) == b"BBBBB"
+    with pytest.raises(EOFError):
+        fdcache.pread(p, 98, 5)
+    fdcache.invalidate(p)
+
+
+def test_basketfile_close_releases_fd(tmp_path, rng):
+    """close() must drop this path's cached fd so a deleted container's
+    inode isn't pinned until LRU eviction."""
+    from repro.io import fdcache
+    p = str(tmp_path / "rel.bskt")
+    write_arrays(p, {"x": rng.standard_normal(1000).astype(np.float32)})
+    with BasketFile(p) as f:
+        f.read_branch("x")
+        with fdcache._lock:
+            assert p in fdcache._entries
+    with fdcache._lock:
+        assert p not in fdcache._entries
+
+
+def test_fdcache_checkout_survives_invalidate(tmp_path):
+    """An fd checked out for a read must not be closed under the reader by
+    a concurrent invalidate (refcounted retirement)."""
+    from repro.io import fdcache
+    p = str(tmp_path / "race.bin")
+    open(p, "wb").write(b"X" * 64)
+    e = fdcache._checkout(p)
+    fdcache.invalidate(p)           # marks dead; must NOT close yet
+    assert e.dead and e.refs == 1
+    assert os.pread(e.fd, 4, 0) == b"XXXX"   # fd still alive for the reader
+    fdcache._checkin(e)             # last reader closes
+    assert e.refs == 0
+
+
+def test_fdcache_concurrent_reads(tmp_path):
+    from repro.io import fdcache
+    p = str(tmp_path / "c.bin")
+    data = bytes(range(256)) * 64
+    open(p, "wb").write(data)
+    errs = []
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(200):
+                off = int(rng.integers(0, len(data) - 32))
+                assert fdcache.pread(p, off, 32) == data[off:off + 32]
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+
+
+def test_parallel_unpack_uses_single_open(tmp_path, rng):
+    """Behavioral check: reads work when the path is opened once and
+    pread-shared across worker threads."""
+    arr = rng.standard_normal(200_000).astype(np.float32)
+    p = str(tmp_path / "b.bskt")
+    write_arrays(p, {"x": arr}, lambda n, a: CompressionConfig("zlib", 1),
+                 target_basket_bytes=32 * 1024)
+    with BasketFile(p, workers=8) as f:
+        np.testing.assert_array_equal(f.read_branch("x"), arr)
+
+
+# ---------------------------------------------------------------------------
+# engine: drain semantics, shm transport
+# ---------------------------------------------------------------------------
+
+def _slow_fail_chunks():
+    yield 0, 1, b"\x00" * 100_000
+    yield 1, 1, b"\x01" * 100_000
+    yield 2, 1, b"\x02" * 100_000
+    yield 3, 1, b"\x03" * 100_000
+
+
+def test_map_ordered_drains_failures_on_close(caplog):
+    """Closing the pack_stream generator early must drain (and log) a
+    worker that fails after the consumer stopped listening — not abandon
+    it silently."""
+    bad_cfg = CompressionConfig("zlib", 5)
+
+    class Boom(Exception):
+        pass
+
+    def chunks():
+        yield 0, 1, b"ok" * 50_000
+        yield 1, 1, b"ok" * 50_000
+        yield 2, 1, b"ok" * 50_000
+
+    with CompressionEngine(workers=2, inline_bytes=0) as eng:
+        import repro.io.engine as engine_mod
+        orig = engine_mod._pack_task
+
+        calls = {"n": 0}
+
+        def flaky(raw, fields, start, count):
+            calls["n"] += 1
+            if start >= 1:
+                time.sleep(0.05)
+                raise Boom("worker died late")
+            return orig(raw, fields, start, count)
+
+        engine_mod._pack_task = flaky
+        try:
+            stream = eng.pack_stream(chunks(), bad_cfg)
+            with caplog.at_level(logging.WARNING, logger="repro.io"):
+                first = next(stream)     # schedules the rest in flight
+                assert first[0] == 0
+                stream.close()           # consumer walks away
+        finally:
+            engine_mod._pack_task = orig
+    assert any("teardown" in r.message for r in caplog.records)
+
+
+def test_shm_transport_byte_identity(tmp_path, rng):
+    """lz4 routes to the process pool; slab transport, pickle fallback and
+    serial must emit identical files."""
+    arr = rng.standard_normal(60_000).astype(np.float32)
+    cfg = CompressionConfig("lz4", 1, "shuffle4")
+    blobs = {}
+    for tag, (workers, shm) in {"serial": (0, False), "shm": (4, "auto"),
+                                "pickle": (4, False)}.items():
+        p = str(tmp_path / f"{tag}.bskt")
+        with CompressionEngine(workers, shm=shm, inline_bytes=0) as eng:
+            with BasketWriter(p, engine=eng) as w:
+                w.write_branch("x", arr, cfg, 16 * 1024)
+        blobs[tag] = open(p, "rb").read()
+    assert blobs["serial"] == blobs["shm"] == blobs["pickle"]
+
+
+def test_shm_identity_codec_roundtrip(tmp_path, rng):
+    """level-0 'none' through the slab transport: payload aliases the slab
+    (the `payload is raw` shortcut)."""
+    arr = rng.integers(0, 255, 300_000).astype(np.uint8)
+    p = str(tmp_path / "n.bskt")
+    cfg = CompressionConfig("repro-deflate", 0, "none")   # routes pure-python
+    with CompressionEngine(2, shm="auto", inline_bytes=0) as eng:
+        with BasketWriter(p, engine=eng) as w:
+            w.write_branch("x", arr, cfg, 64 * 1024)
+    with BasketFile(p) as f:
+        np.testing.assert_array_equal(f.read_branch("x"), arr)
+
+
+def test_shm_unpack_processes(tmp_path, rng):
+    arr = np.cumsum(rng.integers(1, 7, 150_000)).astype(np.int64)
+    p = str(tmp_path / "u.bskt")
+    write_arrays(p, {"x": arr}, lambda n, a: CompressionConfig("lz4", 1, "delta8"),
+                 target_basket_bytes=64 * 1024)
+    from repro.io.prefetch import PrefetchReader
+    with CompressionEngine(2, shm="auto", unpack_processes=True) as eng:
+        with BasketFile(p) as f:
+            r = PrefetchReader(f, "x", engine=eng, ahead=2)
+            np.testing.assert_array_equal(r.read_all(), arr)
+            np.testing.assert_array_equal(r.read_entries(1000, 90_000),
+                                          arr[1000:90_000])
+            r.close()
+
+
+def test_slab_pool_bounds_and_reuse():
+    from repro.io import shmem
+    if not shmem.available():
+        pytest.skip("no shared memory on this platform")
+    pool = shmem.SlabPool(slab_bytes=4096, max_outstanding=2)
+    a = pool.try_acquire(100)
+    b = pool.try_acquire(100)
+    assert a is not None and b is not None
+    assert pool.try_acquire(100) is None        # cap reached -> fallback
+    pool.release(a)
+    c = pool.try_acquire(100)
+    assert c is a                               # recycled, not remapped
+    pool.release(b)
+    pool.release(c)
+    pool.close()
+    with pytest.raises(RuntimeError):
+        pool.acquire(10)
+
+
+# ---------------------------------------------------------------------------
+# streamed checkpoint staging
+# ---------------------------------------------------------------------------
+
+def _state(rng, mb=2):
+    n = (mb << 20) // 8
+    return {
+        "w": rng.standard_normal(n // 2).astype(np.float32).reshape(-1, 64),
+        "opt": {"m": rng.standard_normal(n // 2).astype(np.float32)},
+        "off": np.cumsum(rng.integers(1, 9, n // 4)).astype(np.int64),
+        "step": np.int64(77),
+    }
+
+
+def test_stream_vs_gather_byte_identity_host(tmp_path, rng):
+    from repro.checkpoint import save_pytree
+    tree = _state(rng)
+    pa, pb = str(tmp_path / "a"), str(tmp_path / "b")
+    save_pytree(pa, tree, staging="gather", workers=0)
+    save_pytree(pb, tree, staging="stream", workers=4)
+    assert open(pa, "rb").read() == open(pb, "rb").read()
+
+
+def test_stream_vs_gather_byte_identity_device(tmp_path, rng):
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.checkpoint import save_pytree
+    tree = {"a": jnp.asarray(rng.standard_normal((4000, 100)).astype(np.float32)),
+            "b": jnp.asarray(rng.standard_normal(120_000).astype(np.float32)).astype(jnp.bfloat16),
+            "c": jnp.asarray(np.cumsum(rng.integers(1, 5, 300_000)).astype(np.int64)),
+            "s": jnp.int32(3)}
+    pa, pb = str(tmp_path / "a"), str(tmp_path / "b")
+    save_pytree(pa, tree, staging="gather")
+    save_pytree(pb, tree, staging="stream")
+    assert open(pa, "rb").read() == open(pb, "rb").read()
+
+
+def test_stream_roundtrip_with_template_and_manager(tmp_path, rng):
+    jax = pytest.importorskip("jax")
+    from repro.checkpoint import CheckpointManager
+    tree = _state(rng, mb=1)
+    mgr = CheckpointManager(str(tmp_path), keep=2, workers=2)
+    mgr.save(1, tree, wait=True)
+    mgr.save(2, tree, wait=True, snapshot=True)   # old gather-first path
+    assert mgr.latest_step() == 2
+    template = {"w": None if False else tree["w"], "opt": {"m": tree["opt"]["m"]},
+                "off": tree["off"], "step": tree["step"]}
+    got, meta = mgr.restore(2, template=template)
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+    np.testing.assert_array_equal(np.asarray(got["off"]), tree["off"])
+    # both saves wrote identical data bytes (stream == snapshot+stream)
+    d1 = open(os.path.join(str(tmp_path), "ckpt-00000001.bskt"), "rb").read()
+    d2 = open(os.path.join(str(tmp_path), "ckpt-00000002.bskt"), "rb").read()
+    assert d1 == d2
+
+
+def test_manager_gc_with_fdcache(tmp_path, rng):
+    from repro.checkpoint import CheckpointManager
+    tree = {"x": rng.standard_normal(10_000).astype(np.float32)}
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    for s in (1, 2, 3):
+        mgr.save(s, tree, wait=True)
+        mgr.restore(s)          # populates the fd cache for the data file
+    assert mgr.steps() == [3]
+    assert len([f for f in os.listdir(str(tmp_path)) if f.endswith(".bskt")]) == 1
+
+
+def test_load_pytree_shardings_device_put_per_branch(tmp_path, rng):
+    jax = pytest.importorskip("jax")
+    from repro.checkpoint import load_pytree, save_pytree
+    tree = {"w": rng.standard_normal((64, 32)).astype(np.float32)}
+    p = str(tmp_path / "s.bskt")
+    save_pytree(p, tree)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    got, _ = load_pytree(p, template={"w": None if False else tree["w"]},
+                         shardings={"w": sh})
+    assert isinstance(got["w"], jax.Array)
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# scatter reads
+# ---------------------------------------------------------------------------
+
+def test_read_entries_scatter_parity(tmp_path, rng):
+    arr = np.arange(40_000, dtype=np.int64).reshape(-1, 2)
+    p = str(tmp_path / "e.bskt")
+    write_arrays(p, {"x": arr}, lambda n, a: CompressionConfig("zlib", 3, "shuffle8"),
+                 target_basket_bytes=8192)
+    with BasketFile(p) as f:
+        for a, b in [(0, 5), (1234, 5678), (0, 20_000), (19_990, 20_000)]:
+            np.testing.assert_array_equal(f.read_entries("x", a, b), arr[a:b])
+    with BasketFile(p, workers=2, prefetch=3) as f:
+        for a, b in [(3, 9), (100, 15_000), (0, 20_000)]:
+            np.testing.assert_array_equal(f.read_entries("x", a, b), arr[a:b])
+        np.testing.assert_array_equal(f.read_branch("x"), arr)
