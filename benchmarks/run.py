@@ -20,7 +20,7 @@ import sys
 import time
 
 from . import (fig2_survey, fig3_decompression, fig45_cfzlib, fig6_precond,
-               fig_dict, fig_entropy, fig_parallel, fig_zerocopy,
+               fig_dict, fig_entropy, fig_parallel, fig_tune, fig_zerocopy,
                pipeline_tput, roofline)
 
 BENCHES = {
@@ -31,6 +31,7 @@ BENCHES = {
     "fig_dict": fig_dict,
     "fig_entropy": fig_entropy,
     "fig_parallel": fig_parallel,
+    "fig_tune": fig_tune,
     "fig_zerocopy": fig_zerocopy,
     "pipeline": pipeline_tput,
     "roofline": roofline,

@@ -123,20 +123,30 @@ def _device_chunk_stream(x, rows_per: int, bf16: bool, stage_depth: int = 2):
             yield s, arr.shape[0], memoryview(arr).cast("B")
 
 
+def _branch_cfg(name: str, probe: np.ndarray, profile: str, tuner):
+    """Static policy or measured tuner decision for one branch probe."""
+    if tuner is not None:
+        return tuner.config_for(name, probe)
+    return choose(name, probe, profile)
+
+
 def _branch_stream(name: str, val, profile: str,
                    target_basket_bytes: int = _TARGET_BASKET_BYTES,
-                   stage_depth: int = 2):
+                   stage_depth: int = 2, tuner=None):
     """(dtype_str, shape, chunk_iter, cfg) for one tensor.
 
     Device arrays stream through :func:`_device_chunk_stream`; host arrays
-    split into zero-copy views.  The codec policy probes only the first
-    staged chunk (its first 4096 elements — the same sample the whole-array
-    path reads), so no full-tensor host copy is ever made."""
+    split into zero-copy views.  The codec policy (or tuner) probes only
+    the first staged chunk — stratified windows of that chunk — so no
+    full-tensor host copy is ever made.  The gather path probes the whole
+    array, so a device tensor whose statistics differ between its first
+    basket and the rest may pick a different (still correct) config than
+    the gather path; contents always round-trip."""
     if not isinstance(val, jax.Array) or val.ndim == 0 or val.shape[0] == 0:
         arr = _np_view(val)
         return (arr.dtype.str, arr.shape,
                 split_array(arr, target_basket_bytes),
-                choose(name, arr, profile))
+                _branch_cfg(name, arr, profile, tuner))
     bf16 = str(val.dtype) == "bfloat16"
     np_dtype = np.dtype(np.uint16) if bf16 else np.dtype(val.dtype)
     shape = tuple(val.shape)
@@ -144,14 +154,15 @@ def _branch_stream(name: str, val, profile: str,
     chunks = _device_chunk_stream(val, rows_per, bf16, stage_depth)
     first = next(chunks)
     probe = np.frombuffer(first[2], dtype=np_dtype)
-    cfg = choose(name, probe, profile)
+    cfg = _branch_cfg(name, probe, profile, tuner)
     return (np_dtype.str, shape, itertools.chain([first], chunks), cfg)
 
 
 def save_pytree(path: str, tree, profile: str = "checkpoint",
                 extra_meta: Optional[dict] = None,
                 workers: int = 0, producers: int = 1,
-                staging: str = "stream", stage_depth: int = 2) -> dict:
+                staging: str = "stream", stage_depth: int = 2,
+                tuner=None, objective=None) -> dict:
     """Write a pytree of (host or device) arrays as one BasketFile.
 
     ``workers>0`` compresses each tensor's baskets in parallel through the
@@ -169,9 +180,18 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     ``copy_to_host_async`` slices that feed the compressor as they land —
     peak extra host memory is ~``stage_depth`` baskets per producer
     instead of the whole tree.  ``staging="gather"`` is the old behavior
-    (full ``device_get`` per tensor before compression)."""
+    (full ``device_get`` per tensor before compression).
+
+    ``objective=`` (or an explicit ``tuner=``) switches per-branch codec
+    selection from the static ``profile`` heuristic to measurement-driven
+    tuning (repro.tune): each tensor's config is chosen from trial
+    compressions on sampled payloads, decisions persist in the file
+    header, and a manager-held tuner reuses them across steps."""
     if staging not in ("stream", "gather"):
         raise ValueError(f"staging must be 'stream' or 'gather', got {staging!r}")
+    if tuner is None and objective is not None:
+        from repro.tune import Tuner
+        tuner = Tuner(objective, fallback_profile=profile)
     flat = {n: v for n, v in _flatten_with_paths(tree).items() if v is not None}
     stats = {"branches": 0, "raw": 0, "comp": 0}
     bf16_paths = [n for n, v in flat.items()
@@ -184,19 +204,32 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     def branch_args(name):
         if staging == "stream":
             return _branch_stream(name, flat[name], profile,
-                                  stage_depth=stage_depth)
+                                  stage_depth=stage_depth, tuner=tuner)
         arr = _np_view(flat[name])
         return (arr.dtype.str, arr.shape,
                 split_array(arr, _TARGET_BASKET_BYTES),
-                choose(name, arr, profile))
+                _branch_cfg(name, arr, profile, tuner))
+
+    def lend_engine(engine):
+        # trial matrices fan out through the write's own engine (C-codec
+        # pools); returns a restore callback — a manager-held tuner must
+        # not keep a reference to an engine that closes with this save
+        if tuner is not None and tuner.engine is None and engine is not None:
+            tuner.engine = engine
+            return lambda: setattr(tuner, "engine", None)
+        return lambda: None
 
     if producers <= 1:
-        with BasketWriter(path, workers=workers) as w:
-            for name in flat:
-                dtype, shape, chunks, cfg = branch_args(name)
-                _entry_stats(stats, w.write_branch_chunks(
-                    name, dtype=dtype, shape=shape, chunks=chunks, cfg=cfg))
-            w.write_blob("__meta__", meta_blob)
+        with BasketWriter(path, workers=workers, tuner=tuner) as w:
+            unlend = lend_engine(w._engine)
+            try:
+                for name in flat:
+                    dtype, shape, chunks, cfg = branch_args(name)
+                    _entry_stats(stats, w.write_branch_chunks(
+                        name, dtype=dtype, shape=shape, chunks=chunks, cfg=cfg))
+                w.write_blob("__meta__", meta_blob)
+            finally:
+                unlend()
         return stats
 
     from repro.io.merger import BufferMerger
@@ -204,7 +237,9 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     shards = [names[i::producers] for i in range(producers)]
     errors: list = []
     lock = threading.Lock()
-    with BufferMerger(path, workers=workers) as m:
+    with BufferMerger(path, workers=workers, tuner=tuner) as m:
+        unlend = lend_engine(m._engine)
+
         def produce(shard):
             try:
                 for name in shard:
@@ -220,10 +255,13 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
 
         threads = [threading.Thread(target=produce, args=(s,), daemon=True)
                    for s in shards if s]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
+        try:
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        finally:
+            unlend()
         if errors:
             raise errors[0]
         buf = m.buffer()
@@ -276,13 +314,23 @@ def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, profile: str = "checkpoint",
-                 workers: int = 0, producers: int = 1):
+                 workers: int = 0, producers: int = 1,
+                 tune: bool = False, objective=None):
         self.dir = str(directory)
         os.makedirs(self.dir, exist_ok=True)
         self.keep = keep
         self.profile = profile
         self.workers = workers        # basket-parallel compression width
         self.producers = producers    # tensor-parallel producer threads (merger)
+        # measurement-driven codec selection: one tuner lives for the
+        # manager's lifetime, so step N+1 reuses step N's decisions (zero
+        # re-measurement) and the drift detector spans steps
+        self._tuner = None
+        if tune or objective is not None:
+            from repro.tune import OBJECTIVES, Tuner
+            obj = objective if objective is not None else (
+                profile if profile in OBJECTIVES else "checkpoint")
+            self._tuner = Tuner(obj, fallback_profile=profile)
         self._worker: Optional[threading.Thread] = None
         self._last_stats: Optional[dict] = None
         self._error: Optional[BaseException] = None
@@ -311,6 +359,16 @@ class CheckpointManager:
         donated-away array makes the background save fail, and that
         failure re-raises from the next ``save()``/``wait()``)."""
         self.wait()                                   # one in flight at a time
+        if self._tuner is not None and not self._tuner.decisions:
+            # re-open: seed the tuner from the latest checkpoint's header
+            # so resumed runs never re-measure what a prior run decided
+            last = self.latest_step()
+            if last is not None:
+                from repro.tune import load_decisions
+                try:
+                    self._tuner.load(load_decisions(self._data_path(last)))
+                except Exception:
+                    pass            # unreadable/malformed header: just re-tune
         if snapshot:
             src = jax.tree.map(
                 lambda x: None if x is None else np.asarray(jax.device_get(x)),
@@ -325,7 +383,8 @@ class CheckpointManager:
                                     self.profile, extra_meta,
                                     workers=self.workers,
                                     producers=self.producers,
-                                    staging="stream")
+                                    staging="stream",
+                                    tuner=self._tuner)
                 manifest = {"step": step, "time": time.time(),
                             "wall_s": time.monotonic() - t0, **stats}
                 tmp = self._manifest_path(step) + ".tmp"

@@ -20,6 +20,7 @@ Layout::
 from __future__ import annotations
 
 import base64
+import itertools
 import json
 import os
 import threading
@@ -52,7 +53,8 @@ class BasketWriter:
     output is byte-identical to the serial path.
     """
 
-    def __init__(self, path: str, workers: int = 0, engine=None):
+    def __init__(self, path: str, workers: int = 0, engine=None,
+                 tuner=None, objective=None):
         self.path = str(path)
         self._tmp = self.path + ".tmp"
         os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
@@ -66,12 +68,25 @@ class BasketWriter:
             from repro.io.engine import CompressionEngine
             self._engine = CompressionEngine(workers)
             self._owns_engine = True
+        # adaptive codec selection (repro.tune): branches written without
+        # an explicit cfg are tuned per-branch; decisions persist in the
+        # TOC so re-opens/appends reuse them without re-measurement
+        if tuner is None and objective is not None:
+            from repro.tune import Tuner
+            tuner = Tuner(objective, engine=self._engine)
+        self._tuner = tuner
 
     def write_branch(self, name: str, arr: np.ndarray,
                      cfg: Optional[CompressionConfig] = None,
                      target_basket_bytes: int = 1 << 20) -> dict:
-        """Serialize an array column-wise into compressed baskets."""
+        """Serialize an array column-wise into compressed baskets.
+
+        With a tuner attached and no explicit ``cfg``, the config is the
+        tuner's per-branch decision, measured here on stratified windows
+        of the *whole* array (cached decisions are reused)."""
         arr = np.asarray(arr)
+        if cfg is None and self._tuner is not None:
+            cfg = self._tuner.config_for(name, arr)
         return self.write_branch_chunks(
             name, dtype=arr.dtype.str, shape=arr.shape,
             chunks=split_array(arr, target_basket_bytes), cfg=cfg)
@@ -85,6 +100,15 @@ class BasketWriter:
         the boundaries of :func:`repro.core.basket.basket_rows`."""
         if name in self._branches:
             raise ValueError(f"branch {name!r} already written")
+        if cfg is None and self._tuner is not None:
+            # streaming path: the tuner probes the first chunk (the only
+            # data available without materializing the branch)
+            it = iter(chunks)
+            first = next(it, None)
+            if first is not None:
+                cfg = self._tuner.config_for(
+                    name, first[2], dtype=np.dtype(dtype))
+                chunks = itertools.chain([first], it)
         cfg = cfg or CompressionConfig()
         engine = self._engine
         if engine is None:
@@ -95,6 +119,8 @@ class BasketWriter:
         for _start, _count, payload, meta in packed:
             off = self._f.tell()
             self._f.write(payload)   # accepts memoryview payloads zero-copy
+            if self._tuner is not None:
+                self._tuner.observe(name, meta)     # drift-detector feed
             baskets.append({"offset": off, "meta": meta.to_json()})
         entry = {
             "dtype": np.dtype(dtype).str,
@@ -129,7 +155,16 @@ class BasketWriter:
     def close(self) -> None:
         if self._closed:
             return
-        toc = json.dumps({"branches": self._branches}).encode()
+        doc = {"branches": self._branches}
+        if self._tuner is not None:
+            # persist this file's tuning decisions in the header so appends
+            # and re-opens (Tuner.from_file / load_decisions) reuse them
+            # without re-measurement; decisions for branches not written
+            # here are not this file's to record
+            tuned = self._tuner.decisions_json(names=self._branches)
+            if tuned:
+                doc["tuning"] = tuned
+        toc = json.dumps(doc).encode()
         self._f.write(toc)
         self._f.write(len(toc).to_bytes(8, "little"))
         self._f.write(_MAGIC)
@@ -190,9 +225,18 @@ class BasketFile:
             f.seek(-16 - toc_len, os.SEEK_END)
             self._toc = json.loads(f.read(toc_len))
         self.branches = self._toc["branches"]
+        # per-branch autotuner decisions persisted at write time (may be
+        # absent: files predating repro.tune, or written without a tuner)
+        self.tuning = self._toc.get("tuning", {})
 
     def branch_names(self) -> list[str]:
         return list(self.branches)
+
+    def tuning_decisions(self) -> dict[str, dict]:
+        """Persisted per-branch tuner decisions (``{}`` when untuned) —
+        feed to :meth:`repro.tune.Tuner.load` to append/re-open without
+        re-measurement."""
+        return dict(self.tuning)
 
     def _dictionary(self, entry: dict) -> Optional[bytes]:
         d = entry.get("dictionary")
@@ -339,11 +383,14 @@ class BasketFile:
 def write_arrays(path: str, arrays: dict[str, np.ndarray],
                  cfg_for: Optional[callable] = None,
                  target_basket_bytes: int = 1 << 20,
-                 workers: int = 0) -> None:
+                 workers: int = 0, tuner=None, objective=None) -> None:
     """Write a flat dict of named arrays; ``cfg_for(name, arr)`` picks the
     per-branch CompressionConfig (the codec policy hook); ``workers>0``
-    compresses baskets in parallel (identical bytes)."""
-    with BasketWriter(path, workers=workers) as w:
+    compresses baskets in parallel (identical bytes).  ``tuner=`` /
+    ``objective=`` switch branches without an explicit config to
+    measurement-driven selection (repro.tune)."""
+    with BasketWriter(path, workers=workers, tuner=tuner,
+                      objective=objective) as w:
         for name, arr in arrays.items():
             cfg = cfg_for(name, np.asarray(arr)) if cfg_for else None
             w.write_branch(name, arr, cfg, target_basket_bytes)

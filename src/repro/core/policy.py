@@ -45,14 +45,34 @@ PROFILES: dict[str, dict] = {
 }
 
 
+_OFFSET_WINDOWS = 8
+_OFFSET_WINDOW_ELEMS = 512
+
+
 def _is_offset_like(arr: np.ndarray) -> bool:
-    """Detect offset-array-shaped data: integer, 1-D-ish, mostly monotone."""
+    """Detect offset-array-shaped data: integer, 1-D-ish, mostly monotone.
+
+    Sampled over stratified windows spanning the *whole* array, not just
+    its head: an array with a monotone prefix but a non-monotone tail
+    (appended columns, mixed-phase files) must not be mistaken for an
+    offset array — delta coding the shuffled tail would hurt both ratio
+    and speed.  Monotonicity is judged within each window (no diff across
+    window joins), then averaged.
+    """
     if arr.ndim == 0 or arr.size < 16:
         return False
     flat = arr.reshape(-1)
-    sample = flat[: min(flat.size, 4096)].astype(np.int64)
-    d = np.diff(sample)
-    return bool((d >= 0).mean() > 0.95)
+    w = _OFFSET_WINDOW_ELEMS
+    if flat.size <= _OFFSET_WINDOWS * w:
+        windows = [flat]
+    else:
+        span = flat.size - w
+        starts = [span * i // (_OFFSET_WINDOWS - 1)
+                  for i in range(_OFFSET_WINDOWS)]
+        windows = [flat[s:s + w] for s in starts]
+    fracs = [float((np.diff(win.astype(np.int64)) >= 0).mean())
+             for win in windows if win.size >= 2]
+    return bool(fracs and np.mean(fracs) > 0.95)
 
 
 def precond_for_array(arr: np.ndarray) -> str:
@@ -72,8 +92,18 @@ def precond_for_array(arr: np.ndarray) -> str:
 
 def choose(name: str, arr: np.ndarray, profile: str = "checkpoint",
            dictionary: bytes | None = None) -> CompressionConfig:
-    """The per-branch policy: profile picks (algo, level); dtype picks precond."""
-    p = PROFILES[profile]
+    """The per-branch policy: profile picks (algo, level); dtype picks precond.
+
+    This is the *zero-measurement* path; ``repro.tune.Tuner`` runs the same
+    selection from live measurements and falls back here for branches too
+    small to sample.
+    """
+    try:
+        p = PROFILES[profile]
+    except KeyError:
+        raise ValueError(
+            f"unknown profile {profile!r}; valid profiles: "
+            f"{', '.join(sorted(PROFILES))}") from None
     if p["algo"] == "none":
         return CompressionConfig(algo="none", level=0, precond="none")
     return CompressionConfig(

@@ -36,18 +36,32 @@ __all__ = ["write_token_shards", "TokenPipeline"]
 
 
 def write_token_shards(paths: list[str], *, vocab: int, tokens_per_shard: int,
-                       seed: int = 0, profile: str = "analysis") -> None:
+                       seed: int = 0, profile: str = "analysis",
+                       tune: bool = False, objective=None,
+                       tuner=None) -> None:
     """Synthetic LM corpus: Zipf-ish token stream, one branch per shard.
     Real deployments swap the generator for a tokenized corpus; the
-    container/codec path is identical."""
+    container/codec path is identical.
+
+    ``tune=True`` (or an ``objective=`` / explicit ``tuner=``) replaces the
+    static profile with measurement-driven selection (repro.tune): the
+    first shard runs the trial matrix on its sampled tokens, and every
+    later shard reuses that cached decision — the tuner is shared across
+    shards, so tuning cost is paid once per corpus, and each shard's
+    header carries the decision for re-opens."""
+    if tuner is None and (tune or objective is not None):
+        from repro.tune import Tuner
+        tuner = Tuner(objective if objective is not None else "max_read_tput",
+                      fallback_profile=profile)
     for i, path in enumerate(paths):
         rng = np.random.default_rng(seed + 1000 * i)
         # Zipf-distributed ids compress like natural text-token streams
         toks = rng.zipf(1.3, tokens_per_shard).astype(np.int64)
         toks = (toks % (vocab - 2)) + 2           # reserve 0=pad, 1=eos
         toks = toks.astype(np.int32)
-        with BasketWriter(path) as w:
-            w.write_branch("tokens", toks, choose("tokens", toks, profile))
+        with BasketWriter(path, tuner=tuner) as w:
+            w.write_branch("tokens", toks,
+                           None if tuner else choose("tokens", toks, profile))
 
 
 class TokenPipeline:

@@ -104,6 +104,58 @@ def _pack_task_shm(slab_name: str, nbytes: int, cfg_fields: tuple,
     return start, count, n, meta
 
 
+def _measure_trial(sample, cfg: "_codec.CompressionConfig", reps: int):
+    """Timed compress + decompress-into of one payload (best-of-reps)."""
+    t_c = float("inf")
+    payload = meta = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        payload, meta = _basket.pack_basket(sample, cfg)
+        t_c = min(t_c, time.perf_counter() - t0)
+    out = np.empty(meta.orig_len, np.uint8)
+    t_d = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _basket.unpack_basket_into(payload, meta, out, cfg.dictionary,
+                                   verify=False)
+        t_d = min(t_d, time.perf_counter() - t0)
+    return meta.orig_len, meta.comp_len, t_c, t_d
+
+
+def _trial_task(sample, cfg_fields: tuple, reps: int = 1,
+                budget_s: Optional[float] = None):
+    """One autotuner trial: compress the sampled payload, then decompress
+    it back through the zero-copy into-path, timing both (best-of-reps).
+    Returns ``(orig_len, comp_len, comp_s, decomp_s)`` — the raw cost-model
+    point ``repro.tune`` wraps into a TrialResult.
+
+    ``budget_s`` bounds the per-candidate cost: an eighth of the sample is
+    measured first, and the full sample runs only if the extrapolated cost
+    fits the budget — so a slow candidate (the pure-Python cores can run
+    at single-digit MB/s) is ranked from its probe instead of stalling the
+    trial matrix.  The probe keeps the sample's stratification: it takes
+    the leading eighth of each of 8 equal segments (= a slice of every
+    sampler window), not a head-only prefix — head-only probing is the
+    mistuning mode the stratified sampler exists to avoid.
+    """
+    cfg = _codec.CompressionConfig(*cfg_fields)
+    reps = max(int(reps), 1)
+    n = _buf_len(sample)
+    if budget_s is not None and n >= 4096:
+        a = np.frombuffer(sample, np.uint8) \
+            if not isinstance(sample, np.ndarray) else sample.reshape(-1)
+        seg = n // 8
+        sub = max((seg // 8) & ~7, 8)    # element-aligned for every precond
+        probe = np.concatenate([a[(i * seg) & ~7:((i * seg) & ~7) + sub]
+                                for i in range(8)])
+        cut = probe.size
+        res = _measure_trial(probe, cfg, 1)
+        est = (res[2] + res[3]) * (n / max(cut, 1)) * reps
+        if est > budget_s:
+            return res
+    return _measure_trial(sample, cfg, reps)
+
+
 def _unpack_task(path: str, offset: int, meta_json: dict,
                  dictionary: Optional[bytes], verify: bool) -> bytes:
     meta = _basket.BasketMeta.from_json(meta_json)
@@ -504,6 +556,27 @@ class CompressionEngine:
 
         inner.add_done_callback(_done)
         return outer
+
+    # -- autotuner trials (used by repro.tune) ---------------------------
+
+    def submit_trial(self, sample, cfg_fields: tuple, reps: int = 1,
+                     budget_s: Optional[float] = None) -> Future:
+        """Schedule one tuner trial (compress + decompress the sampled
+        payload under ``cfg_fields``, timed); returns a Future of
+        ``(orig_len, comp_len, comp_s, decomp_s)``.  Routed like any
+        compression task: thread pool for GIL-releasing codecs, process
+        pool for the pure-Python cores — so a trial matrix measures
+        ``workers``-wide.  Timings are taken inside the worker; under a
+        loaded pool concurrent trials contend for cores, which perturbs
+        absolute MB/s but preserves the ranking the tuner selects on."""
+        pool = self._pool_for(cfg_fields[0])
+        if pool is None:
+            return _completed_future(_trial_task, sample, cfg_fields, reps,
+                                     budget_s)
+        if isinstance(pool, ProcessPoolExecutor) and \
+                not isinstance(sample, (bytes, bytearray)):
+            sample = bytes(sample)      # pickle transport needs a real object
+        return pool.submit(_trial_task, sample, cfg_fields, reps, budget_s)
 
     def submit_unpack_into(self, path: str, offset: int, meta_json: dict,
                            dictionary: Optional[bytes], verify: bool,

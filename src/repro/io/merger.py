@@ -27,6 +27,7 @@ that wants one artifact out the other end.
 from __future__ import annotations
 
 import base64
+import itertools
 import threading
 from typing import Iterable, Optional
 
@@ -44,8 +45,10 @@ __all__ = ["BasketBuffer", "BufferMerger", "merge_files"]
 class BasketBuffer:
     """In-memory compressed branch set, filled by one producer."""
 
-    def __init__(self, engine: Optional[CompressionEngine] = None):
+    def __init__(self, engine: Optional[CompressionEngine] = None,
+                 tuner=None):
         self._engine = engine
+        self._tuner = tuner
         self._branches: dict[str, dict] = {}   # name -> TOC-entry skeleton
         self._payloads: dict[str, list[bytes]] = {}
 
@@ -53,6 +56,8 @@ class BasketBuffer:
                      cfg: Optional[CompressionConfig] = None,
                      target_basket_bytes: int = 1 << 20) -> dict:
         arr = np.asarray(arr)
+        if cfg is None and self._tuner is not None:
+            cfg = self._tuner.config_for(name, arr)
         return self.write_branch_chunks(
             name, dtype=arr.dtype.str, shape=arr.shape,
             chunks=split_array(arr, target_basket_bytes), cfg=cfg)
@@ -63,11 +68,20 @@ class BasketBuffer:
         chunk stream (the producers>1 checkpoint staging path)."""
         if name in self._branches:
             raise ValueError(f"branch {name!r} already buffered")
+        if cfg is None and self._tuner is not None:
+            it = iter(chunks)
+            first = next(it, None)
+            if first is not None:
+                cfg = self._tuner.config_for(
+                    name, first[2], dtype=np.dtype(dtype))
+                chunks = itertools.chain([first], it)
         cfg = cfg or CompressionConfig()
         # CompressionEngine(0) is the serial path — no pools, same stream
         packed = (self._engine or CompressionEngine(0)).pack_stream(chunks, cfg)
         payloads, baskets = [], []
         for _start, _count, payload, meta in packed:
+            if self._tuner is not None:
+                self._tuner.observe(name, meta)
             # pack_stream payloads are only valid until the next iteration
             # (slab transport / zero-copy identity path) — the buffer
             # retains them, so it must own the bytes
@@ -106,18 +120,26 @@ class BufferMerger:
     """One output file, many producers; merges are serialized by a lock."""
 
     def __init__(self, path: str, workers: int = 0,
-                 engine: Optional[CompressionEngine] = None):
+                 engine: Optional[CompressionEngine] = None,
+                 tuner=None, objective=None):
         self._engine = engine
         self._owns_engine = False
         if engine is None and workers:
             self._engine = CompressionEngine(workers)
             self._owns_engine = True
-        self._writer = BasketWriter(path)
+        if tuner is None and objective is not None:
+            from repro.tune import Tuner
+            tuner = Tuner(objective, engine=self._engine)
+        self._tuner = tuner
+        # the writer carries the tuner so merged branches' decisions
+        # persist in the output TOC (Tuner.config_for is thread-safe —
+        # producers tune concurrently, per-branch decisions serialize)
+        self._writer = BasketWriter(path, tuner=tuner)
         self._lock = threading.Lock()
 
     def buffer(self) -> BasketBuffer:
         """A fresh producer-side buffer wired to the shared engine."""
-        return BasketBuffer(engine=self._engine)
+        return BasketBuffer(engine=self._engine, tuner=self._tuner)
 
     def merge(self, buf: BasketBuffer, clear: bool = True) -> None:
         """Append ``buf``'s pre-compressed baskets to the file (no
