@@ -1,0 +1,230 @@
+"""Remote basket service benchmark: vectorization, coalescing, cache, wire.
+
+A loopback ``BasketServer`` serves two containers; every comparison is an
+A/B measured in the same process and the same phase (paired baselines, so
+machine-speed drift between phases cancels):
+
+* **readv** — one ~N MiB branch read three ways through the same server:
+
+  - ``naive``      one basket per round-trip (``read_basket_raw`` loop) —
+                   the no-vectorization client every request-latency paper
+                   starts from;
+  - ``coalesced``  vectored ``read_branch`` (64-basket requests the server
+                   coalesces into large sequential preads);
+  - ``coalesced+cache`` the same client re-reading through a warm
+                   :class:`~repro.remote.TieredCache`.
+
+  Reported as MB/s plus the server's round-trip/pread counts — the
+  mechanism (fewer round-trips, fewer syscalls) next to the effect.
+
+* **wire** — an archive-tier (lzma) container read with the plain wire vs
+  the transcoded wire (read-bound objective): end-to-end wall, wire bytes,
+  and the isolated client *decode* throughput of the fetched payloads —
+  the axis the transcode trades wire bytes for.
+
+``--check`` is the CI perf-smoke gate: coalesced+cached remote reads must
+beat naive per-basket requests by ≥ 2x, and transcoded-wire client decode
+throughput must beat archive-wire decode under the read-bound objective.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.basket import BasketMeta, unpack_basket
+from repro.core.bfile import write_arrays
+from repro.core.codec import CompressionConfig
+from repro.remote import BasketServer, RemoteBasketFile, TieredCache
+
+from .common import emit
+
+MB = 1 << 20
+
+
+def _best(fn, reps):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _mbps(nbytes: int, seconds: float) -> float:
+    return round(nbytes / seconds / 1e6, 1)
+
+
+def _bench_dir():
+    for d in ("/dev/shm", None):
+        if d is None or (os.path.isdir(d) and os.access(d, os.W_OK)):
+            return tempfile.TemporaryDirectory(dir=d, prefix="fig_remote_")
+
+
+def _hot_data(size: int) -> np.ndarray:
+    rng = np.random.default_rng(11)
+    return np.cumsum(rng.integers(1, 9, size // 8)).astype(np.int64)
+
+
+def _decode_all(pairs) -> int:
+    total = 0
+    for payload, meta_json in pairs:
+        meta = BasketMeta.from_json(meta_json)
+        total += len(unpack_basket(payload, meta, None))
+    return total
+
+
+def run(out_csv: str | None = None, quick: bool = False) -> list[dict]:
+    rows: list[dict] = []
+    reps = 3 if quick else 5
+    hot_mb = 8 if quick else 32
+    arch_mb = 2 if quick else 8
+    basket = 64 * 1024
+
+    with _bench_dir() as td:
+        # zlib-1: C-backed in every environment, so the readv A/B measures
+        # the *request plane* (round-trips, coalescing, cache) and not the
+        # decode throughput of whatever zstd backend this host has
+        hot = _hot_data(hot_mb * MB)
+        write_arrays(os.path.join(td, "hot.bskt"), {"x": hot},
+                     cfg_for=lambda n, a: CompressionConfig("zlib", 1, "delta8"),
+                     target_basket_bytes=basket)
+        arch = _hot_data(arch_mb * MB)
+        write_arrays(os.path.join(td, "archive.bskt"), {"y": arch},
+                     cfg_for=lambda n, a: CompressionConfig("lzma", 2, "shuffle"),
+                     target_basket_bytes=basket)
+
+        with BasketServer(td, workers=4) as srv:
+            srv.start()
+
+            # ---- readv: naive vs coalesced vs coalesced+cache ----------
+            url = srv.url("hot.bskt")
+            n_baskets = None
+
+            def stats_delta(fn):
+                before = dict(srv.stats)
+                fn()
+                return {k: srv.stats[k] - before[k] for k in before}
+
+            with RemoteBasketFile(url, wire=None) as rf:
+                n_baskets = len(rf.branches["x"]["baskets"])
+
+                def naive():
+                    for i in range(n_baskets):
+                        rf.read_basket_raw("x", i)
+                t_naive = _best(naive, reps)
+                d_naive = stats_delta(naive)
+
+            with RemoteBasketFile(url, wire=None, batch_baskets=64) as rf:
+                def coalesced():
+                    np.testing.assert_array_equal(rf.read_branch("x")[:4],
+                                                  hot[:4])
+                t_coal = _best(coalesced, reps)
+                d_coal = stats_delta(coalesced)
+
+            cache = TieredCache(mem_bytes=4 * hot_mb * MB)
+            with RemoteBasketFile(url, wire=None, batch_baskets=64,
+                                  cache=cache) as rf:
+                rf.read_branch("x")            # warm both tiers
+                def cached():
+                    np.testing.assert_array_equal(rf.read_branch("x")[:4],
+                                                  hot[:4])
+                t_cache = _best(cached, reps)
+                d_cache = stats_delta(cached)
+            cache.close()
+
+            for case, t, d in [("naive-b1", t_naive, d_naive),
+                               ("coalesced-b64", t_coal, d_coal),
+                               ("coalesced+cache", t_cache, d_cache)]:
+                rows.append({
+                    "bench": "fig_remote", "stage": "readv", "case": case,
+                    "bytes": hot.nbytes, "baskets": n_baskets,
+                    "MBps": _mbps(hot.nbytes, t),
+                    "speedup_vs_naive": round(t_naive / t, 2),
+                    "round_trips": d["requests"], "preads": d["preads"],
+                    "decode_MBps": "", "wire_bytes": "", "wire_algos": "",
+                })
+
+            # ---- wire: archive vs transcoded (read-bound objective) ----
+            aurl = srv.url("archive.bskt")
+            for case, wire in [("archive-lzma", None), ("transcoded", "auto")]:
+                with RemoteBasketFile(aurl, wire=wire,
+                                      objective="max_read_tput",
+                                      batch_baskets=64) as rf:
+                    nb = len(rf.branches["y"]["baskets"])
+
+                    def e2e():
+                        np.testing.assert_array_equal(rf.read_branch("y")[:4],
+                                                      arch[:4])
+                    t_e2e = _best(e2e, reps)
+                    pairs = rf.fetch_wire("y", range(nb))
+                    wire_bytes = sum(len(p) for p, _m in pairs)
+                    algos = sorted({m["algo"] for _p, m in pairs})
+                    t_dec = _best(lambda: _decode_all(pairs), reps)
+                rows.append({
+                    "bench": "fig_remote", "stage": "wire", "case": case,
+                    "bytes": arch.nbytes, "baskets": nb,
+                    "MBps": _mbps(arch.nbytes, t_e2e),
+                    "speedup_vs_naive": "", "round_trips": "", "preads": "",
+                    "decode_MBps": _mbps(arch.nbytes, t_dec),
+                    "wire_bytes": wire_bytes,
+                    "wire_algos": "+".join(algos),
+                })
+
+    emit(rows, out_csv)
+    return rows
+
+
+def check(rows: list[dict]) -> int:
+    """CI perf-smoke gate (see module docstring)."""
+    ok = True
+
+    def fail(msg):
+        nonlocal ok
+        print(f"FAIL: {msg}", file=sys.stderr)
+        ok = False
+
+    readv = {r["case"]: r for r in rows if r["stage"] == "readv"}
+    if "naive-b1" not in readv or "coalesced+cache" not in readv:
+        fail("missing readv rows")
+    else:
+        s = readv["coalesced+cache"]["speedup_vs_naive"]
+        if s < 2.0:
+            fail(f"coalesced+cached remote read only {s}x vs naive (< 2x)")
+        if readv["coalesced-b64"]["round_trips"] >= \
+                readv["naive-b1"]["round_trips"]:
+            fail("vectored read did not reduce round-trips")
+    wire = {r["case"]: r for r in rows if r["stage"] == "wire"}
+    if "archive-lzma" not in wire or "transcoded" not in wire:
+        fail("missing wire rows")
+    else:
+        if wire["transcoded"]["decode_MBps"] <= wire["archive-lzma"]["decode_MBps"]:
+            fail(f"transcoded-wire decode {wire['transcoded']['decode_MBps']} "
+                 f"MB/s not faster than archive wire "
+                 f"{wire['archive-lzma']['decode_MBps']} MB/s")
+        if wire["transcoded"]["wire_algos"] == "lzma":
+            fail("read-bound objective did not transcode the archive wire")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpora, fewer repeats")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless coalesced+cached beats naive "
+                         ">=2x and the transcoded wire decodes faster "
+                         "(CI perf-smoke)")
+    ap.add_argument("--out", default="artifacts/bench/fig_remote.csv")
+    args = ap.parse_args(argv)
+    rows = run(args.out, quick=args.quick)
+    return check(rows) if args.check else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

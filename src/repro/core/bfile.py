@@ -34,10 +34,10 @@ from .basket import (BasketMeta, byte_offsets, join_baskets, split_array,
 from .codec import CompressionConfig
 
 
-def _pread(path: str, offset: int, n: int) -> bytes:
+def _pread(path: str, offset: int, n: int, expect=None) -> bytes:
     # lazy import: repro.io imports repro.core at package-init time
     from repro.io import fdcache
-    return fdcache.pread(path, offset, n)
+    return fdcache.pread(path, offset, n, expect=expect)
 
 __all__ = ["BasketWriter", "BasketFile", "write_arrays", "read_arrays"]
 
@@ -214,7 +214,14 @@ class BasketFile:
         self._engine = None
         self._readers: dict = {}
         self._reader_lock = threading.Lock()
+        self._closed = False
         with open(self.path, "rb") as f:
+            # the generation of the inode whose TOC we are about to read:
+            # every later pread checks against it, so a tmp-then-replace of
+            # the path raises StaleFileError instead of slicing baskets out
+            # of a file this TOC does not describe
+            st = os.fstat(f.fileno())
+            self.generation = (st.st_dev, st.st_ino)
             head = f.read(8)
             if head != _MAGIC:
                 raise ValueError(f"{path}: not a BasketFile (bad magic)")
@@ -247,13 +254,15 @@ class BasketFile:
         the fast-merge path."""
         entry = self.branches[name]
         b = entry["baskets"][i]
-        return _pread(self.path, b["offset"], b["meta"]["comp_len"])
+        return _pread(self.path, b["offset"], b["meta"]["comp_len"],
+                      expect=self.generation)
 
     def read_basket_raw(self, name: str, i: int) -> bytes:
         entry = self.branches[name]
         b = entry["baskets"][i]
         meta = BasketMeta.from_json(b["meta"])
-        payload = _pread(self.path, b["offset"], meta.comp_len)
+        payload = _pread(self.path, b["offset"], meta.comp_len,
+                         expect=self.generation)
         return unpack_basket(payload, meta, self._dictionary(entry), verify=self.verify)
 
     def read_basket_into(self, name: str, i: int, out) -> int:
@@ -262,7 +271,8 @@ class BasketFile:
         entry = self.branches[name]
         b = entry["baskets"][i]
         meta = BasketMeta.from_json(b["meta"])
-        payload = _pread(self.path, b["offset"], meta.comp_len)
+        payload = _pread(self.path, b["offset"], meta.comp_len,
+                         expect=self.generation)
         return unpack_basket_into(payload, meta, out, self._dictionary(entry),
                                   verify=self.verify)
 
@@ -358,14 +368,18 @@ class BasketFile:
 
     def close(self) -> None:
         """Release prefetch readers, the engine pool, and this path's
-        cached fd (so a closed-then-deleted container's inode isn't pinned
-        until LRU eviction)."""
-        for r in self._readers.values():
+        cached fd (so a long-lived server doesn't pin unlinked inodes
+        until LRU eviction).  Idempotent: a second close is a no-op."""
+        with self._reader_lock:
+            if self._closed:
+                return
+            self._closed = True
+            readers, self._readers = list(self._readers.values()), {}
+            engine, self._engine = self._engine, None
+        for r in readers:
             r.close()
-        self._readers.clear()
-        if self._engine is not None:
-            self._engine.close()
-            self._engine = None
+        if engine is not None:
+            engine.close()
         from repro.io import fdcache
         fdcache.invalidate(self.path)
 

@@ -9,6 +9,10 @@ Fault-tolerance / scale properties:
   * **deterministic host sharding** — shard files are assigned
     round-robin by (host_id, n_hosts); every host sees a disjoint stream,
     and re-running with the same ids reproduces it exactly;
+  * **remote shards** — a path may be a ``repro://host:port/file.bskt``
+    URL served by ``repro.remote.BasketServer``; the prefetching reader
+    then pulls baskets over vectored wire requests (optionally transcoded
+    decode-cheap) instead of local preads, same bytes either way;
   * **exact restart cursor** — the pipeline state is (epoch, file index,
     window index); ``state_dict()``/``load_state_dict()`` round-trip it, so
     a restore resumes mid-shard with no token skew (basket index = restart
@@ -114,20 +118,32 @@ class TokenPipeline:
     def _windows_of_file(self, path: str) -> np.ndarray:
         """Decompress one shard through the prefetching reader: all baskets
         scheduled on the shared engine, joined in entry order (the
-        simultaneous-read-and-decompress hot path)."""
+        simultaneous-read-and-decompress hot path).  ``repro://`` shard
+        URLs open a ``RemoteBasketFile`` instead — the same reader then
+        fetches baskets as vectored wire requests."""
         if self._stop.is_set():
             # a straggler producer must not recreate the engine that
             # _shutdown just closed (it would leak); die quietly instead
             raise RuntimeError("pipeline closed")
         if self._io_engine is None:
             self._io_engine = CompressionEngine(self.decomp_workers)
-        reader = PrefetchReader(BasketFile(path), "tokens",
-                                ahead=self.prefetch_baskets,
-                                engine=self._io_engine)
+        remote = path.startswith("repro://")
+        if remote:
+            from repro.remote import RemoteBasketFile
+            bfile = RemoteBasketFile(path)
+        else:
+            bfile = BasketFile(path)
         try:
-            toks = reader.read_all()
+            reader = PrefetchReader(bfile, "tokens",
+                                    ahead=self.prefetch_baskets,
+                                    engine=self._io_engine)
+            try:
+                toks = reader.read_all()
+            finally:
+                reader.close()
         finally:
-            reader.close()
+            if remote:
+                bfile.close()
         w = self.seq_len + 1
         n_win = toks.size // w
         return toks[: n_win * w].reshape(n_win, w)

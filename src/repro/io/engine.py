@@ -157,27 +157,29 @@ def _trial_task(sample, cfg_fields: tuple, reps: int = 1,
 
 
 def _unpack_task(path: str, offset: int, meta_json: dict,
-                 dictionary: Optional[bytes], verify: bool) -> bytes:
+                 dictionary: Optional[bytes], verify: bool,
+                 ident: Optional[tuple] = None) -> bytes:
     meta = _basket.BasketMeta.from_json(meta_json)
-    payload = _fdcache.pread(path, offset, meta.comp_len)
+    payload = _fdcache.pread(path, offset, meta.comp_len, expect=ident)
     return _basket.unpack_basket(payload, meta, dictionary, verify=verify)
 
 
 def _unpack_task_into(path: str, offset: int, meta_json: dict,
-                      dictionary: Optional[bytes], verify: bool, out) -> int:
+                      dictionary: Optional[bytes], verify: bool, out,
+                      ident: Optional[tuple] = None) -> int:
     """Read + decompress one basket directly into ``out`` (same-process
     destination slice — the thread-pool / serial scatter path)."""
     meta = _basket.BasketMeta.from_json(meta_json)
-    payload = _fdcache.pread(path, offset, meta.comp_len)
+    payload = _fdcache.pread(path, offset, meta.comp_len, expect=ident)
     return _basket.unpack_basket_into(payload, meta, out, dictionary,
                                       verify=verify)
 
 
 def _unpack_task_shm(path: str, offset: int, meta_json: dict,
                      dictionary: Optional[bytes], verify: bool,
-                     slab_name: str):
+                     slab_name: str, ident: Optional[tuple] = None):
     """Worker body: decode into the slab; only the length crosses back."""
-    raw = _unpack_task(path, offset, meta_json, dictionary, verify)
+    raw = _unpack_task(path, offset, meta_json, dictionary, verify, ident)
     n = _shmem.write_back(slab_name, raw)
     return raw if n is None else n
 
@@ -412,6 +414,18 @@ class CompressionEngine:
             for f in pending:
                 self._drain(f)
 
+    # -- generic compute (shared-service hook) ---------------------------
+
+    def submit(self, fn, *args) -> Future:
+        """Run ``fn(*args)`` on the engine's thread pool (inline when
+        ``workers=0``) — the shared-compute hook for services built on one
+        engine, e.g. the remote basket server's wire transcoding, where
+        the C archive codecs release the GIL while decoding."""
+        pool = self._pool_for("none")      # the thread pool
+        if pool is None:
+            return _completed_future(fn, *args)
+        return pool.submit(fn, *args)
+
     # -- compression side ------------------------------------------------
 
     def pack_stream(self, chunks: Iterable[tuple[int, int, bytes]],
@@ -507,24 +521,28 @@ class CompressionEngine:
     # -- decompression side (used by the prefetching reader) -------------
 
     def submit_unpack(self, path: str, offset: int, meta_json: dict,
-                      dictionary: Optional[bytes], verify: bool) -> Future:
-        """Schedule one basket's read+decompress; returns a Future[bytes]."""
+                      dictionary: Optional[bytes], verify: bool,
+                      ident: Optional[tuple] = None) -> Future:
+        """Schedule one basket's read+decompress; returns a Future[bytes].
+        ``ident`` is the container's captured (st_dev, st_ino) generation —
+        the read fails with ``StaleFileError`` if the path was replaced."""
         algo = meta_json.get("algo", "none") if self.unpack_processes else "none"
         pool = self._pool_for(algo)
         if pool is None:
             return _completed_future(_unpack_task, path, offset, meta_json,
-                                     dictionary, verify)
+                                     dictionary, verify, ident)
         if pool is self._proc_pool:
             slabs = self._slabs()
             if slabs is not None:
                 return self._submit_unpack_shm(pool, slabs, path, offset,
-                                               meta_json, dictionary, verify)
+                                               meta_json, dictionary, verify,
+                                               ident)
         return pool.submit(_unpack_task, path, offset, meta_json,
-                           dictionary, verify)
+                           dictionary, verify, ident)
 
     @staticmethod
     def _submit_unpack_shm(pool, slabs, path, offset, meta_json,
-                           dictionary, verify) -> Future:
+                           dictionary, verify, ident=None) -> Future:
         """Process unpack over the slab transport: the worker decodes into
         a slab; the parent's completion callback lifts the bytes out (one
         memcpy instead of a pickled pipe round-trip) and recycles it.
@@ -534,10 +552,10 @@ class CompressionEngine:
         slab = slabs.try_acquire(int(meta_json["orig_len"]))
         if slab is None:
             return pool.submit(_unpack_task, path, offset, meta_json,
-                               dictionary, verify)
+                               dictionary, verify, ident)
         try:
             inner = pool.submit(_unpack_task_shm, path, offset, meta_json,
-                                dictionary, verify, slab.name)
+                                dictionary, verify, slab.name, ident)
         except BaseException:
             slabs.release(slab)
             raise
@@ -580,7 +598,7 @@ class CompressionEngine:
 
     def submit_unpack_into(self, path: str, offset: int, meta_json: dict,
                            dictionary: Optional[bytes], verify: bool,
-                           out) -> Future:
+                           out, ident: Optional[tuple] = None) -> Future:
         """Schedule one basket's read+decompress **into** ``out`` (a
         writable 1-D uint8 view of the destination array slice); returns a
         Future[int] of bytes written.  Thread/serial workers decode in
@@ -590,7 +608,7 @@ class CompressionEngine:
         pool = self._pool_for(algo)
         if pool is None:
             return _completed_future(_unpack_task_into, path, offset,
-                                     meta_json, dictionary, verify, out)
+                                     meta_json, dictionary, verify, out, ident)
         if pool is self._proc_pool:
             slabs = self._slabs()
             slab = slabs.try_acquire(int(meta_json["orig_len"])) \
@@ -601,10 +619,10 @@ class CompressionEngine:
                     # the destination slice — one memcpy, no intermediate
                     inner = pool.submit(_unpack_task_shm, path, offset,
                                         meta_json, dictionary, verify,
-                                        slab.name)
+                                        slab.name, ident)
                 else:
                     inner = pool.submit(_unpack_task, path, offset,
-                                        meta_json, dictionary, verify)
+                                        meta_json, dictionary, verify, ident)
             except BaseException:
                 if slab is not None:
                     slabs.release(slab)
@@ -635,4 +653,4 @@ class CompressionEngine:
             inner.add_done_callback(_done)
             return outer
         return pool.submit(_unpack_task_into, path, offset, meta_json,
-                           dictionary, verify, out)
+                           dictionary, verify, out, ident)

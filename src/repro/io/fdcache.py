@@ -30,7 +30,17 @@ import os
 import threading
 from collections import OrderedDict
 
-__all__ = ["pread", "invalidate", "clear"]
+__all__ = ["pread", "generation", "invalidate", "clear", "StaleFileError"]
+
+
+class StaleFileError(OSError):
+    """The path no longer points at the inode the caller captured.
+
+    Raised by :func:`pread` when an ``expect`` generation is supplied and
+    the path's current ``(st_dev, st_ino)`` differs — i.e. the container
+    was atomically replaced after the caller read its TOC.  Readers catch
+    this to re-open instead of mixing baskets from two file generations.
+    """
 
 _MAX_FDS = 64
 
@@ -99,16 +109,37 @@ def _checkin(e: _Entry) -> None:
             _close_quietly(e.fd)
 
 
-def pread(path: str, offset: int, n: int) -> bytes:
-    """Read ``n`` bytes at ``offset`` through the per-path cached fd."""
+def pread(path: str, offset: int, n: int, expect: tuple | None = None) -> bytes:
+    """Read ``n`` bytes at ``offset`` through the per-path cached fd.
+
+    ``expect`` is a ``(st_dev, st_ino)`` generation captured when the
+    caller read the file's TOC (see :func:`generation`); if the path now
+    resolves to a different inode the read raises :class:`StaleFileError`
+    instead of returning bytes from a file the TOC does not describe."""
     e = _checkout(path)
     try:
+        if expect is not None and tuple(expect) != e.ident:
+            raise StaleFileError(
+                f"{path}: file was replaced (generation {e.ident} != "
+                f"expected {tuple(expect)})")
         buf = os.pread(e.fd, n, offset)
     finally:
         _checkin(e)
     if len(buf) != n:
         raise EOFError(f"{path}: short read at {offset}: {len(buf)} < {n}")
     return buf
+
+
+def generation(path: str) -> tuple[int, int]:
+    """The path's current ``(st_dev, st_ino)`` identity — the generation
+    key used by every basket cache (prefetch LRU, remote tiered cache) so
+    a replaced file can never serve stale cached baskets.  Goes through
+    the fd cache, so the identity matches what :func:`pread` will read."""
+    e = _checkout(path)
+    try:
+        return e.ident
+    finally:
+        _checkin(e)
 
 
 def invalidate(path: str) -> None:

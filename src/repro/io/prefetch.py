@@ -17,6 +17,19 @@ physics events", paper Fig. 1).  ``PrefetchReader`` reproduces that:
 The reader is stateless with respect to the file (it uses the offsets and
 metadata captured from the TOC at construction), so many readers can share
 one ``BasketFile`` and one engine.
+
+Staleness: the source's ``(st_dev, st_ino)`` generation is captured with
+the TOC and passed to every scheduled read — a container replaced under
+the reader raises ``fdcache.StaleFileError`` instead of mixing cached
+baskets from the old file with fresh reads of the new one.
+
+Remote sources: any object exposing ``branches``/``_dictionary`` plus a
+``submit_baskets(branch, idxs) -> list[Future[bytes]]`` method (e.g.
+``repro.remote.RemoteBasketFile``) can sit where the local ``BasketFile``
+does.  Scheduling batches every uncached index of a prefetch/acquire wave
+into ONE ``submit_baskets`` call, which the remote client turns into one
+vectored wire request — the read-ahead that makes a high-latency link
+look local.
 """
 
 from __future__ import annotations
@@ -45,15 +58,23 @@ class PrefetchReader:
         self.branch = branch
         self.dtype = np.dtype(entry["dtype"])
         self.shape = tuple(entry["shape"])
-        self.verify = bfile.verify if verify is None else verify
+        self.verify = getattr(bfile, "verify", True) if verify is None else verify
         self._dictionary = bfile._dictionary(entry)
         self._offsets = [b["offset"] for b in entry["baskets"]]
         self._meta_json = [dict(b["meta"]) for b in entry["baskets"]]
         self._metas = [BasketMeta.from_json(m) for m in self._meta_json]
+        # remote sources schedule through the source itself (one vectored
+        # request per wave); local files through the engine + fdcache
+        self._source = bfile if hasattr(bfile, "submit_baskets") else None
+        # the generation of the file this TOC describes: every scheduled
+        # read checks it, so a tmp-then-replaced container fails loudly
+        # instead of serving baskets the cached metadata does not match
+        self.generation = getattr(bfile, "generation", None)
         self.ahead = max(int(ahead), 0)
         self.cache_baskets = max(int(cache_baskets), 1)
-        self._engine = engine or CompressionEngine(workers)
-        self._owns_engine = engine is None
+        self._engine = engine or (None if self._source is not None
+                                  else CompressionEngine(workers))
+        self._owns_engine = engine is None and self._engine is not None
         self._lock = threading.Lock()
         self._cache: OrderedDict[int, Future] = OrderedDict()  # idx -> Future[bytes]
         self.hits = 0
@@ -64,29 +85,46 @@ class PrefetchReader:
     def n_baskets(self) -> int:
         return len(self._metas)
 
-    def _schedule(self, idx: int) -> Future:
-        """Ensure basket ``idx`` is scheduled (or cached); LRU-touch it."""
-        fut = self._cache.get(idx)
-        if fut is not None:
-            self._cache.move_to_end(idx)
-            return fut
-        fut = self._engine.submit_unpack(
-            self.path, self._offsets[idx], self._meta_json[idx],
-            self._dictionary, self.verify)
-        self._cache[idx] = fut
-        while len(self._cache) > self.cache_baskets:
-            old_idx, old_fut = next(iter(self._cache.items()))
-            if not old_fut.done():        # never drop work still in flight
-                break
-            self._cache.popitem(last=False)
-        return fut
+    def _submit(self, idxs: list[int]) -> list[Future]:
+        """Source-side scheduling of uncached baskets, one batch."""
+        if self._source is not None:
+            return self._source.submit_baskets(self.branch, idxs,
+                                               verify=self.verify)
+        return [self._engine.submit_unpack(
+            self.path, self._offsets[i], self._meta_json[i],
+            self._dictionary, self.verify, self.generation) for i in idxs]
+
+    def _schedule_many(self, idxs) -> list[Future]:
+        """Ensure every index is scheduled (or cached); LRU-touch hits and
+        submit the misses as ONE batch.  Call with the lock held."""
+        have: dict[int, Future] = {}
+        missing: list[int] = []
+        for i in idxs:
+            if i in have:
+                continue
+            fut = self._cache.get(i)
+            if fut is not None:
+                self._cache.move_to_end(i)
+                have[i] = fut
+            else:
+                missing.append(i)
+                have[i] = None  # placeholder: preserves dedup
+        if missing:
+            for i, fut in zip(missing, self._submit(missing)):
+                self._cache[i] = fut
+                have[i] = fut
+            while len(self._cache) > self.cache_baskets:
+                _old_idx, old_fut = next(iter(self._cache.items()))
+                if not old_fut.done():        # never drop work still in flight
+                    break
+                self._cache.popitem(last=False)
+        return [have[i] for i in idxs]
 
     def prefetch(self, indices) -> None:
         """Schedule decompression for the given basket indices."""
         with self._lock:
-            for i in indices:
-                if 0 <= i < len(self._metas):
-                    self._schedule(i)
+            self._schedule_many([i for i in indices
+                                 if 0 <= i < len(self._metas)])
 
     def _acquire(self, indices) -> list[Future]:
         """Futures for baskets about to be *consumed*.  Holding the future
@@ -94,13 +132,11 @@ class PrefetchReader:
         decompression of work already in flight; an index already cached
         (even if still decompressing — i.e. prefetched in time) is a hit."""
         with self._lock:
-            futs = []
             for i in indices:
                 cached = i in self._cache
                 self.hits += cached
                 self.misses += not cached
-                futs.append(self._schedule(i))
-            return futs
+            return self._schedule_many(indices)
 
     def _trim(self) -> None:
         """Shrink the cache back to ``cache_baskets`` (oldest completed
@@ -165,7 +201,8 @@ class PrefetchReader:
         as decode-**into** tasks targeting the destination slice directly —
         those bypass the cache (their result is a byte count, not reusable
         bytes), which is the right trade for a bulk scan that would blow
-        the LRU anyway."""
+        the LRU anyway.  Remote sources fetch the misses as one vectored
+        wave and scatter the returned bytes."""
         out = np.empty(self.shape, dtype=self.dtype)
         flat = out.reshape(-1).view(np.uint8)
         offs, pos = byte_offsets(m.orig_len for m in self._metas)
@@ -191,10 +228,16 @@ class PrefetchReader:
                 else:
                     self.misses += 1
                     missing.append(i)
+        if self._source is not None:
+            into_futs = list(zip(missing, self._submit(missing))) if missing else []
+            for i, fut in cached_tasks + into_futs:
+                self._scatter(flat, offs[i], fut.result())
+            self._trim()
+            return out
         into_futs = [self._engine.submit_unpack_into(
             self.path, self._offsets[i], self._meta_json[i],
             self._dictionary, self.verify,
-            flat[offs[i]:offs[i] + self._metas[i].orig_len])
+            flat[offs[i]:offs[i] + self._metas[i].orig_len], self.generation)
             for i in missing]
         for i, fut in cached_tasks:
             self._scatter(flat, offs[i], fut.result())

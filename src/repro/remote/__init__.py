@@ -1,0 +1,30 @@
+"""repro.remote — the basket-granular content service (DESIGN.md §12).
+
+The distribution layer over the local stack: an xrootd-analogue server
+exports directories of BasketFiles and answers *vectored* basket requests
+coalesced into large sequential preads; clients mirror the ``BasketFile``
+read API over the wire with readahead, per-request wire transcoding
+(archive codecs re-encoded decode-cheap for read-bound objectives), and a
+tiered decoded/wire cache keyed by the file's (st_dev, st_ino) generation.
+
+Entry points:
+
+* :class:`BasketServer` — serve a directory (``python -m repro.remote`` /
+  ``tools/bserve.py`` are the CLI);
+* :class:`RemoteBasketFile` / :func:`connect` — open a
+  ``repro://host:port/path`` URL with the local reader API;
+* :class:`TieredCache` — the client cache, shareable across files;
+* ``repro.data.pipeline.TokenPipeline`` accepts ``repro://`` shard URLs
+  directly, and :class:`repro.io.prefetch.PrefetchReader` accepts a
+  ``RemoteBasketFile`` wherever a local ``BasketFile`` goes.
+"""
+
+from .cache import TieredCache, basket_key
+from .client import RemoteBasketFile, connect
+from .protocol import ProtocolError, coalesce, format_url, parse_url
+from .server import BasketServer
+
+__all__ = [
+    "BasketServer", "RemoteBasketFile", "connect", "TieredCache",
+    "basket_key", "ProtocolError", "coalesce", "parse_url", "format_url",
+]

@@ -1,0 +1,495 @@
+"""RemoteBasketFile — the networked mirror of ``BasketFile``'s read API.
+
+Opens a ``repro://host:port/path`` URL, fetches the catalog (TOC + tuning
+decisions + generation) once, and then serves ``read_branch`` /
+``read_entries`` / ``read_basket_raw`` with the same semantics and the
+same bytes as a local :class:`~repro.core.bfile.BasketFile` on the
+server's copy.  The mechanics under the mirror:
+
+* **vectored requests** — basket wants are batched (``batch_baskets`` per
+  round-trip) so the server can coalesce them into sequential preads; a
+  bulk branch read pipelines the next batch's request behind the current
+  batch's response, hiding one link latency per batch;
+* **wire negotiation** — ``wire="auto"`` asks the server to transcode
+  archive-tier payloads into decode-cheap codecs when the declared
+  ``objective`` says it pays (``repro.remote.transcode``); the basket's
+  raw checksum is verified after decode, end-to-end across the transcode;
+* **zero-copy decode** — wire payloads decode straight into the
+  destination array slice (``unpack_basket_into``, the PR 3 plane);
+* **tiered cache** — an optional :class:`~repro.remote.cache.TieredCache`
+  keyed by (path, generation, branch, index) serves decoded re-reads from
+  memory and cold re-opens from spilled wire payloads;
+* **prefetch integration** — :meth:`submit_baskets` makes this object a
+  valid source for :class:`repro.io.prefetch.PrefetchReader`: scheduled
+  indices are fetched by a background thread as ONE vectored request per
+  wave, which is how the data pipeline overlaps remote fetch with
+  compute.
+"""
+
+from __future__ import annotations
+
+import base64
+import queue
+import socket
+import threading
+from concurrent.futures import Future
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.basket import (BasketMeta, byte_offsets, join_baskets,
+                               unpack_basket, unpack_basket_into)
+
+from . import protocol as P
+from .cache import TieredCache, basket_key
+from .transcode import DEFAULT_ACCEPT
+
+__all__ = ["RemoteBasketFile", "connect"]
+
+
+def connect(url: str, **kw) -> "RemoteBasketFile":
+    """Open a ``repro://host:port/path`` URL."""
+    return RemoteBasketFile(url, **kw)
+
+
+class RemoteBasketFile:
+    """Read one served BasketFile over RBSP (see module docstring).
+
+    ``wire``: ``"auto"`` negotiates transcoding under ``objective`` with
+    the default accept list; ``None``/``False`` forces plain archive
+    payloads; a sequence of codec names is an explicit accept list.
+    """
+
+    def __init__(self, url: Optional[str] = None, *, host: Optional[str] = None,
+                 port: Optional[int] = None, path: Optional[str] = None,
+                 wire="auto", objective: str = "max_read_tput",
+                 accept: Optional[Sequence[str]] = None,
+                 link_mbps: Optional[float] = None,
+                 cache: Optional[TieredCache] = None,
+                 batch_baskets: int = 32, verify: bool = True,
+                 timeout: float = 30.0):
+        if url is not None:
+            host, port, path = P.parse_url(url)
+        if host is None or port is None or path is None:
+            raise ValueError("need a repro:// url or host=/port=/path=")
+        self.host, self.port, self.path = host, int(port), str(path)
+        self.verify = verify
+        self.batch_baskets = max(int(batch_baskets), 1)
+        self.cache = cache
+        if wire is None or wire is False:
+            self._wire = None
+        else:
+            if accept is not None:
+                acc = list(accept)
+            elif isinstance(wire, str) and wire != "auto":
+                acc = [wire]                       # wire="lz4" etc.
+            elif not isinstance(wire, (str, bool)):
+                acc = list(wire)                   # explicit accept list
+            else:
+                acc = list(DEFAULT_ACCEPT)
+            self._wire = {"objective": objective, "accept": acc}
+            if link_mbps is not None:
+                # declared link speed shifts the server's transcode optimum
+                # (identity on fast links, real codecs as bytes get dear)
+                self._wire["link_mbps"] = float(link_mbps)
+        self._io_lock = threading.Lock()    # serializes the socket
+        self._fetch_lock = threading.Lock()  # lazy fetcher-thread init
+        self._sock = socket.create_connection((self.host, self.port),
+                                              timeout=timeout)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._rfile = self._sock.makefile("rb")
+        self._closed = False
+        # background fetcher (lazy): serves submit_baskets waves
+        self._fetchq: Optional[queue.Queue] = None
+        self._fetcher: Optional[threading.Thread] = None
+        try:
+            cat = self._request(P.REQ_CATALOG, {"path": self.path})[0]
+        except BaseException:
+            # a failed open must not leak the connected socket (probing
+            # loops over shard URLs would leak one fd per missing file)
+            self._rfile.close()
+            self._sock.close()
+            raise
+        order = cat.get("order") or list(cat["branches"])
+        self.branches = {n: cat["branches"][n] for n in order}
+        self.tuning = cat.get("tuning", {})
+        self.generation = tuple(cat["generation"])
+        self.server_transcode = bool(cat.get("transcode", False))
+        # cache namespace: the endpoint qualifies the path — two servers
+        # exporting same-named files (whose inodes can collide across
+        # hosts) must never share entries in a shared TieredCache
+        self._cache_ns = f"{self.host}:{self.port}/{self.path}"
+
+    # -- BasketFile API mirror ------------------------------------------
+
+    def branch_names(self) -> list[str]:
+        return list(self.branches)
+
+    def tuning_decisions(self) -> dict[str, dict]:
+        return dict(self.tuning)
+
+    def _dictionary(self, entry: dict) -> Optional[bytes]:
+        d = entry.get("dictionary")
+        return base64.b64decode(d) if d else None
+
+    def compressed_bytes(self, name: Optional[str] = None) -> int:
+        names = [name] if name else self.branch_names()
+        return sum(b["meta"]["comp_len"]
+                   for n in names for b in self.branches[n]["baskets"])
+
+    def raw_bytes(self, name: Optional[str] = None) -> int:
+        names = [name] if name else self.branch_names()
+        return sum(b["meta"]["orig_len"]
+                   for n in names for b in self.branches[n]["baskets"])
+
+    # -- wire ------------------------------------------------------------
+
+    def _send(self, ftype: int, body: dict) -> None:
+        self._sock.sendall(P.pack_frame(ftype, body))
+
+    def _recv(self, want: int) -> tuple[dict, bytes]:
+        ftype, body, payload = P.read_frame(self._rfile)
+        if ftype == P.RESP_ERROR:
+            raise RuntimeError(f"server error: {body.get('error')}")
+        if ftype != want:
+            raise P.ProtocolError(f"expected frame {want}, got {ftype}")
+        return body, payload
+
+    def _request(self, ftype: int, body: dict, want: Optional[int] = None
+                 ) -> tuple[dict, bytes]:
+        if want is None:
+            want = {P.REQ_CATALOG: P.RESP_CATALOG, P.REQ_READV: P.RESP_READV,
+                    P.REQ_PING: P.RESP_PING}[ftype]
+        with self._io_lock:
+            self._send(ftype, body)
+            return self._recv(want)
+
+    def ping(self) -> bool:
+        return bool(self._request(P.REQ_PING, {})[0].get("ok"))
+
+    def _readv_body(self, name: str, idxs: Sequence[int]) -> dict:
+        return {"path": self.path, "generation": list(self.generation),
+                "baskets": [[name, int(i)] for i in idxs],
+                "wire": self._wire}
+
+    def _split_response(self, body: dict, payload: bytes
+                        ) -> list[tuple[bytes, dict]]:
+        out, pos = [], 0
+        for b in body["baskets"]:
+            ln = int(b["len"])
+            if pos + ln > len(payload):
+                raise P.ProtocolError("response payload shorter than "
+                                      "declared basket lengths")
+            out.append((payload[pos:pos + ln], b["meta"]))
+            pos += ln
+        if pos != len(payload):
+            raise P.ProtocolError("response payload longer than declared "
+                                  "basket lengths")
+        return out
+
+    def _resync(self, inflight: int) -> None:
+        """Drain responses for requests already on the wire after one of
+        them failed — a pipelined connection must never be left a response
+        behind (the next caller would read an orphaned RESP_READV as its
+        own and silently scatter the wrong baskets).  If draining itself
+        fails the stream state is unknowable: poison the socket so every
+        later use fails loudly instead of desynchronizing."""
+        try:
+            for _ in range(inflight):
+                P.read_frame(self._rfile)
+        except Exception:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+
+    def fetch_wire(self, name: str, idxs: Sequence[int],
+                   on_batch=None) -> list[tuple[bytes, dict]]:
+        """Fetch wire ``(payload, meta_json)`` pairs for baskets ``idxs``
+        of branch ``name`` — batched into vectored requests, each batch's
+        request pipelined behind the previous batch's response.
+
+        ``on_batch(batch_idxs, pairs)`` streams each batch to the caller
+        as its response lands (decode overlaps the next batch's transfer
+        and only one batch of wire bytes is ever held); without it the
+        pairs for all ``idxs`` are returned as one list."""
+        idxs = list(idxs)
+        if not idxs:
+            return []
+        groups = [idxs[i:i + self.batch_baskets]
+                  for i in range(0, len(idxs), self.batch_baskets)]
+        out: list[tuple[bytes, dict]] = []
+        with self._io_lock:
+            # pipeline: request g+1 is on the wire while we block on g's
+            # response — the server answers a connection's requests in
+            # order, so responses arrive in group order
+            sent = consumed = 0
+            try:
+                self._send(P.REQ_READV, self._readv_body(name, groups[0]))
+                sent += 1
+                for g in range(len(groups)):
+                    if g + 1 < len(groups):
+                        self._send(P.REQ_READV,
+                                   self._readv_body(name, groups[g + 1]))
+                        sent += 1
+                    try:
+                        body, payload = self._recv(P.RESP_READV)
+                    finally:
+                        # _recv consumed one frame even when it raised on
+                        # a RESP_ERROR; only a transport/framing failure
+                        # leaves the frame unconsumed
+                        consumed += 1
+                    pairs = self._split_response(body, payload)
+                    if self.cache is not None:
+                        # async spill: the background writer does the file
+                        # I/O — a slow disk must not stall the pipeline
+                        # (and every _io_lock waiter behind it)
+                        for i, (p, m) in zip(groups[g], pairs):
+                            self.cache.put_wire_async(
+                                self._key(name, i), p, m)
+                    if on_batch is not None:
+                        on_batch(groups[g], pairs)
+                    else:
+                        out.extend(pairs)
+            except (P.ProtocolError, OSError):
+                # framing/transport failure: stream state unknowable —
+                # poison the socket so later use fails loudly
+                try:
+                    self._sock.close()
+                except OSError:
+                    pass
+                raise
+            except BaseException:
+                self._resync(sent - consumed)
+                raise
+        return out
+
+    # -- decode ----------------------------------------------------------
+
+    def _key(self, name: str, i: int) -> tuple:
+        return basket_key(self._cache_ns, self.generation, name, i)
+
+    def _decode(self, name: str, payload, meta_json: dict,
+                verify: Optional[bool] = None) -> bytes:
+        entry = self.branches[name]
+        meta = BasketMeta.from_json(meta_json)
+        d = self._dictionary(entry) if meta.has_dict else None
+        return unpack_basket(bytes(payload), meta, d,
+                             verify=self.verify if verify is None else verify)
+
+    def _decode_into(self, name: str, payload, meta_json: dict, out) -> int:
+        entry = self.branches[name]
+        meta = BasketMeta.from_json(meta_json)
+        d = self._dictionary(entry) if meta.has_dict else None
+        return unpack_basket_into(payload, meta, out, d, verify=self.verify)
+
+    def read_basket_raw(self, name: str, i: int) -> bytes:
+        """Decoded raw bytes of one basket (cache-aware)."""
+        if self.cache is not None:
+            raw = self.cache.get_decoded(self._key(name, i))
+            if raw is not None:
+                return raw
+            w = self.cache.get_wire(self._key(name, i))
+            if w is not None:
+                raw = self._decode(name, *w)
+                self.cache.put_decoded(self._key(name, i), raw)
+                return raw
+            self.cache.record_miss()
+        (p, m), = self.fetch_wire(name, [i])
+        raw = self._decode(name, p, m)
+        if self.cache is not None:
+            self.cache.put_decoded(self._key(name, i), raw)
+        return raw
+
+    def read_basket_into(self, name: str, i: int, out) -> int:
+        """Fetch + decode basket ``i`` directly into ``out``."""
+        if self.cache is not None:
+            raw = self.cache.get_decoded(self._key(name, i))
+            if raw is None:
+                w = self.cache.get_wire(self._key(name, i))
+                if w is not None:
+                    return self._decode_into(name, w[0], w[1], out)
+                self.cache.record_miss()
+            else:
+                b = np.frombuffer(raw, dtype=np.uint8)
+                np.asarray(out).reshape(-1).view(np.uint8)[:b.size] = b
+                return b.size
+        (p, m), = self.fetch_wire(name, [i])
+        return self._decode_into(name, p, m, out)
+
+    # -- bulk reads ------------------------------------------------------
+
+    def _classify(self, name: str, idxs: Sequence[int]):
+        """Partition indices into (decoded-hit, wire-hit, fetch) against
+        the cache; returns (decoded {i: raw}, wires {i: (payload, meta)},
+        missing [i])."""
+        decoded, wires, missing = {}, {}, []
+        if self.cache is None:
+            return decoded, wires, list(idxs)
+        for i in idxs:
+            k = self._key(name, i)
+            raw = self.cache.get_decoded(k)
+            if raw is not None:
+                decoded[i] = raw
+                continue
+            w = self.cache.get_wire(k)
+            if w is not None:
+                wires[i] = w
+            else:
+                self.cache.record_miss()
+                missing.append(i)
+        return decoded, wires, missing
+
+    def read_branch(self, name: str, workers: Optional[int] = None) -> np.ndarray:
+        """Whole-branch read, byte-identical to the local
+        ``BasketFile.read_branch`` of the served file.  The destination is
+        allocated once; cached decoded baskets scatter-copy, everything
+        else decodes wire payloads straight into its slice."""
+        entry = self.branches[name]
+        n = len(entry["baskets"])
+        out = np.empty(tuple(entry["shape"]), dtype=np.dtype(entry["dtype"]))
+        offs, total = byte_offsets(b["meta"]["orig_len"]
+                                   for b in entry["baskets"])
+        if total != out.nbytes:     # malformed TOC: copying fallback
+            chunks = [self.read_basket_raw(name, i) for i in range(n)]
+            return join_baskets(chunks, entry["dtype"], tuple(entry["shape"]))
+        flat = out.reshape(-1).view(np.uint8)
+        lens = [b["meta"]["orig_len"] for b in entry["baskets"]]
+        # populate the decoded tier only when the whole branch fits in half
+        # the memory budget — a bulk scan of a huge branch must not cycle
+        # the LRU (the TTreeCache scan-pollution rule read_all follows too)
+        keep = self.cache is not None and self.cache.mem_bytes \
+            and total <= self.cache.mem_bytes // 2
+        decoded, wires, missing = self._classify(name, range(n))
+        for i, raw in decoded.items():
+            flat[offs[i]:offs[i] + lens[i]] = np.frombuffer(raw, np.uint8)
+
+        def _land(i: int, p, m) -> None:
+            self._decode_into(name, p, m, flat[offs[i]:offs[i] + lens[i]])
+            if keep:
+                self.cache.put_decoded(
+                    self._key(name, i), bytes(flat[offs[i]:offs[i] + lens[i]]))
+
+        for i, (p, m) in wires.items():
+            _land(i, p, m)
+        if missing:
+            # streamed: each batch decodes into its slices as its response
+            # lands — decode overlaps the next batch's transfer, and only
+            # one batch of wire payloads is ever held in memory
+            self.fetch_wire(name, missing, on_batch=lambda bidxs, pairs: [
+                _land(i, p, m) for i, (p, m) in zip(bidxs, pairs)])
+        return out
+
+    def read_entries(self, name: str, start: int, stop: int) -> np.ndarray:
+        """Row-range read touching only the covering baskets."""
+        entry = self.branches[name]
+        shape = tuple(entry["shape"])
+        dtype = np.dtype(entry["dtype"])
+        cover, first_entry, total = [], None, 0
+        for i, b in enumerate(entry["baskets"]):
+            m = b["meta"]
+            if m["entry_start"] + m["entry_count"] <= start \
+                    or m["entry_start"] >= stop:
+                continue
+            if first_entry is None:
+                first_entry = m["entry_start"]
+            cover.append((i, total, m["orig_len"]))
+            total += m["orig_len"]
+        if not cover:
+            return np.zeros((0,) + shape[1:], dtype=dtype)
+        row_elems = int(np.prod(shape[1:], dtype=np.int64)) or 1
+        rows = total // (dtype.itemsize * row_elems)
+        arr = np.empty((rows,) + shape[1:], dtype=dtype)
+        flat = arr.reshape(-1).view(np.uint8)
+        idxs = [i for i, _o, _l in cover]
+        decoded, wires, missing = self._classify(name, idxs)
+        fetched = dict(zip(missing, self.fetch_wire(name, missing))) \
+            if missing else {}
+        for i, off, ln in cover:
+            if i in decoded:
+                flat[off:off + ln] = np.frombuffer(decoded[i], np.uint8)
+            else:
+                p, m = wires[i] if i in wires else fetched[i]
+                self._decode_into(name, p, m, flat[off:off + ln])
+        return arr[start - first_entry: stop - first_entry].copy()
+
+    # -- PrefetchReader source hook --------------------------------------
+
+    def submit_baskets(self, name: str, idxs: Sequence[int],
+                       verify: Optional[bool] = None) -> list[Future]:
+        """Schedule decoded-bytes futures for baskets ``idxs`` — the
+        remote-source hook ``PrefetchReader`` batches its read-ahead
+        through.  Each call is one wave: a background fetch thread turns
+        it into one vectored request (cache-aware), so waves queued while
+        a fetch is in flight ride the connection back-to-back.  ``verify``
+        overrides this file's checksum setting for the wave (the reader's
+        own ``verify=`` knob)."""
+        futs = [Future() for _ in idxs]
+        if idxs:
+            self._fetch_queue().put((name, list(idxs), futs, verify))
+        return futs
+
+    def _fetch_queue(self) -> queue.Queue:
+        with self._fetch_lock:
+            if self._fetchq is None:
+                self._fetchq = queue.Queue()
+                self._fetcher = threading.Thread(
+                    target=self._fetch_loop, daemon=True,
+                    name="repro-remote-fetch")
+                self._fetcher.start()
+            return self._fetchq
+
+    def _fetch_loop(self) -> None:
+        while True:
+            item = self._fetchq.get()
+            if item is None:
+                return
+            name, idxs, futs, verify = item
+            fut_of = dict(zip(idxs, futs))
+
+            def _deliver(i: int, payload, meta_json) -> None:
+                raw = self._decode(name, payload, meta_json, verify)
+                if self.cache is not None:
+                    self.cache.put_decoded(self._key(name, i), raw)
+                fut_of[i].set_result(raw)
+
+            try:
+                decoded, wires, missing = self._classify(name, idxs)
+                for i, raw in decoded.items():
+                    fut_of[i].set_result(raw)
+                for i, (p, m) in wires.items():
+                    _deliver(i, p, m)
+                if missing:
+                    # streamed: each batch's futures resolve as its
+                    # response lands, so a whole-branch wave never holds
+                    # more than one batch of wire payloads (the consumer
+                    # scatters resolved baskets while later batches are
+                    # still in flight)
+                    self.fetch_wire(name, missing,
+                                    on_batch=lambda bidxs, pairs: [
+                                        _deliver(i, p, m)
+                                        for i, (p, m) in zip(bidxs, pairs)])
+            except BaseException as e:
+                for fut in futs:
+                    if not fut.done():
+                        fut.set_exception(e)
+
+    # -- lifecycle -------------------------------------------------------
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._fetchq is not None:
+            self._fetchq.put(None)
+            self._fetcher.join(timeout=5)
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()

@@ -1,0 +1,652 @@
+"""repro.remote: the basket-granular content service (DESIGN.md §12).
+
+Covers the ISSUE-5 acceptance surface:
+
+* local-vs-remote byte identity for every events-corpus branch, plain and
+  transcoded wires (checksums verified end-to-end across the transcode);
+* vectored-read coalescing unit tests;
+* tiered-cache hit / eviction / spill / generation-keying tests;
+* multi-client concurrent soak (8 clients, one server);
+* malformed / truncated-frame rejection, client and server side;
+* a golden wire-frame blob pinning the protocol bytes;
+* the PR-5 satellite bugfixes: generation-checked preads (a replaced file
+  raises instead of serving stale baskets) and idempotent closes.
+"""
+
+import os
+import socket
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.bfile import BasketFile, BasketWriter, write_arrays
+from repro.core.codec import CompressionConfig
+from repro.data.events import write_event_file
+from repro.io import fdcache
+from repro.io.prefetch import PrefetchReader
+from repro.remote import (BasketServer, ProtocolError, RemoteBasketFile,
+                          TieredCache, basket_key, coalesce)
+from repro.remote import protocol as P
+from repro.remote import transcode as T
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "wire_pr5.bin")
+
+
+# ---------------------------------------------------------------------------
+# fixtures: one served directory per module
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    td = tmp_path_factory.mktemp("remote")
+    events = write_event_file(str(td / "events.bskt"), n_events=1500,
+                              profile="analysis", basket_bytes=4096)
+    # an archive-tier container: what the transcoder exists for
+    arch = {"Jet_pt": events["Jet_pt"], "Jet_offsets": events["Jet_offsets"]}
+    write_arrays(str(td / "archive.bskt"), arch,
+                 cfg_for=lambda n, a: CompressionConfig("lzma", 2, "shuffle"),
+                 target_basket_bytes=16 * 1024)
+    with BasketServer(str(td), workers=2) as srv:
+        srv.start()
+        yield {"dir": td, "server": srv, "events": events}
+
+
+def _open(served, **kw):
+    return RemoteBasketFile(served["server"].url("events.bskt"), **kw)
+
+
+# ---------------------------------------------------------------------------
+# byte identity, plain and transcoded
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire", [None, "auto"])
+def test_every_branch_byte_identical(served, wire):
+    with BasketFile(str(served["dir"] / "events.bskt")) as local, \
+            _open(served, wire=wire) as rf:
+        assert rf.branch_names() == local.branch_names()
+        for name in local.branch_names():
+            a, b = local.read_branch(name), rf.read_branch(name)
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("wire", [None, "auto"])
+def test_archive_file_transcoded_identical(served, wire):
+    with BasketFile(str(served["dir"] / "archive.bskt")) as local, \
+            RemoteBasketFile(served["server"].url("archive.bskt"),
+                             wire=wire, objective="max_read_tput") as rf:
+        for name in local.branch_names():
+            np.testing.assert_array_equal(local.read_branch(name),
+                                          rf.read_branch(name))
+
+
+def test_transcode_actually_happened(served):
+    before = served["server"].stats["transcoded"]
+    with RemoteBasketFile(served["server"].url("archive.bskt"),
+                          wire="auto", objective="max_read_tput") as rf:
+        rf.read_branch("Jet_pt")
+    assert served["server"].stats["transcoded"] > before
+
+
+def test_read_entries_matches_local(served):
+    with BasketFile(str(served["dir"] / "events.bskt")) as local, \
+            _open(served) as rf:
+        for (lo, hi) in [(0, 10), (100, 1100), (1490, 1500), (700, 701)]:
+            np.testing.assert_array_equal(
+                local.read_entries("Jet_pt", lo, hi),
+                rf.read_entries("Jet_pt", lo, hi))
+        assert rf.read_entries("Jet_pt", 50_000, 60_000).size == 0
+
+
+def test_catalog_mirrors_toc(served):
+    with BasketFile(str(served["dir"] / "events.bskt")) as local, \
+            _open(served) as rf:
+        assert rf.tuning_decisions() == local.tuning_decisions()
+        assert rf.generation == local.generation
+        assert rf.compressed_bytes() == local.compressed_bytes()
+        assert rf.raw_bytes() == local.raw_bytes()
+        assert rf.ping()
+
+
+def test_prefetch_reader_remote_source(served):
+    with BasketFile(str(served["dir"] / "events.bskt")) as local, \
+            _open(served) as rf:
+        want = local.read_branch("Muon_pt")
+        r = PrefetchReader(rf, "Muon_pt", ahead=2)
+        np.testing.assert_array_equal(r.read_all(), want)
+        np.testing.assert_array_equal(r.read_entries(5, 60), want[5:60])
+        assert r.hits + r.misses > 0
+        r.close()
+
+
+# ---------------------------------------------------------------------------
+# coalescing
+# ---------------------------------------------------------------------------
+
+def test_coalesce_adjacent_and_gaps():
+    # adjacent ranges merge; a gap <= max_gap merges; a larger one splits
+    got = coalesce([(0, 10), (10, 10), (30, 5)], max_gap=16, max_span=1 << 20)
+    assert got == [(0, 35, [0, 1, 2])]
+    got = coalesce([(0, 10), (100, 10)], max_gap=16)
+    assert got == [(0, 10, [0]), (100, 10, [1])]
+
+
+def test_coalesce_sorts_and_keeps_member_indices():
+    got = coalesce([(100, 10), (0, 10), (110, 5)], max_gap=0)
+    assert got == [(0, 10, [1]), (100, 15, [0, 2])]
+
+
+def test_coalesce_span_cap():
+    got = coalesce([(0, 6), (6, 6)], max_gap=64, max_span=10)
+    assert got == [(0, 6, [0]), (6, 6, [1])]
+
+
+def test_coalesce_overlapping_ranges():
+    got = coalesce([(0, 20), (10, 5)], max_gap=0)
+    assert got == [(0, 20, [0, 1])]
+    assert got[0][0] + got[0][1] >= 15
+
+
+def test_coalesced_server_preads(served):
+    # one vectored request over an entire branch must cost far fewer
+    # preads than baskets (the events file lays a branch's baskets
+    # adjacently, so they coalesce into a handful of sequential reads)
+    srv = served["server"]
+    with _open(served, wire=None, batch_baskets=1024) as rf:
+        n_baskets = len(rf.branches["Jet_pt"]["baskets"])
+        assert n_baskets > 4
+        before = dict(srv.stats)
+        rf.read_branch("Jet_pt")
+        d_req = srv.stats["requests"] - before["requests"]
+        d_pread = srv.stats["preads"] - before["preads"]
+        assert d_req == 1
+        assert d_pread < n_baskets
+        assert srv.stats["baskets_served"] >= n_baskets
+
+
+# ---------------------------------------------------------------------------
+# transcoding decisions
+# ---------------------------------------------------------------------------
+
+def _lzma_basket():
+    rng = np.random.default_rng(3)
+    arr = np.cumsum(rng.integers(1, 9, 8192)).astype(np.int64)
+    from repro.core.basket import pack_basket
+    payload, meta = pack_basket(memoryview(arr).cast("B"),
+                                CompressionConfig("lzma", 2, "shuffle"))
+    return payload, meta.to_json()
+
+
+def test_ratio_bound_objective_keeps_archive():
+    payload, meta = _lzma_basket()
+    wp, wm = T.transcode_basket(payload, meta, None, "min_bytes")
+    assert wm is meta and wp is payload
+    assert T.wire_candidates(meta, "production", T.DEFAULT_ACCEPT) == []
+
+
+def test_read_bound_objective_transcodes_lzma():
+    payload, meta = _lzma_basket()
+    wp, wm = T.transcode_basket(payload, meta, None, "max_read_tput")
+    assert wm["algo"] != "lzma"
+    assert wm["algo"] in T.DEFAULT_ACCEPT
+    # invariants across the transcode: raw identity is checksum-protected
+    assert wm["orig_len"] == meta["orig_len"]
+    assert wm["stored_len"] == meta["stored_len"]
+    assert wm["checksum"] == meta["checksum"]
+    assert wm["precond"] == meta["precond"]
+    assert wm["comp_len"] == len(wp)
+    assert T.verify_transcode(payload, meta, wp, wm)
+
+
+def test_identity_and_none_source_pass_through():
+    from repro.core.basket import pack_basket
+    raw = os.urandom(4096)     # incompressible: identity payload
+    payload, meta = pack_basket(raw, CompressionConfig("none", 0))
+    wp, wm = T.transcode_basket(payload, meta.to_json(), None, "max_read_tput")
+    assert wm["algo"] == "none" and bytes(wp) == bytes(payload)
+
+
+def test_transcode_never_decodes_slower_codec():
+    # zlib-1 already decodes faster than the pure-Python lz4 core could
+    # even in lz4's best case, so the prefilter prunes it before any
+    # encode CPU is spent and the payload passes through
+    from repro.core.basket import pack_basket
+    arr = np.arange(4096, dtype=np.int64)
+    payload, meta = pack_basket(memoryview(arr).cast("B"),
+                                CompressionConfig("zlib", 1, "delta8"))
+    assert T.wire_candidates(meta.to_json(), "max_read_tput", ("lz4",)) == []
+    wp, wm = T.transcode_basket(payload, meta.to_json(), None,
+                                "max_read_tput", accept=("lz4",))
+    assert wm is meta.to_json() or wm == meta.to_json()
+    assert bytes(wp) == bytes(payload)
+
+
+def test_slow_link_shifts_wire_choice():
+    # on a fast link identity wins the read-bound blend; on a slow link
+    # wire bytes dominate and a real wire codec (or the archive itself)
+    # must win over identity
+    payload, meta = _lzma_basket()
+    _wp, wm_fast = T.transcode_basket(payload, meta, None, "max_read_tput",
+                                      link_mbps=10_000.0)
+    assert wm_fast["algo"] == "none"
+    _wp, wm_slow = T.transcode_basket(payload, meta, None, "max_read_tput",
+                                      link_mbps=5.0)
+    assert wm_slow["algo"] != "none"
+
+
+# ---------------------------------------------------------------------------
+# tiered cache
+# ---------------------------------------------------------------------------
+
+def test_cache_mem_hit_and_eviction():
+    c = TieredCache(mem_bytes=100, disk_bytes=0)
+    k1, k2, k3 = (basket_key("p", (1, 2), "b", i) for i in range(3))
+    c.put_decoded(k1, b"a" * 40)
+    c.put_decoded(k2, b"b" * 40)
+    assert c.get_decoded(k1) == b"a" * 40      # touch k1 -> k2 is LRU
+    c.put_decoded(k3, b"c" * 40)               # evicts k2
+    assert c.get_decoded(k2) is None
+    assert c.get_decoded(k1) is not None and c.get_decoded(k3) is not None
+    st = c.stats()
+    assert st["mem_used"] <= 100 and st["mem_hits"] >= 3
+    c.close()
+
+
+def test_cache_disk_spill_and_budget(tmp_path):
+    c = TieredCache(mem_bytes=0, disk_bytes=100, disk_dir=str(tmp_path / "d"))
+    k1, k2, k3 = (basket_key("p", (1, 2), "b", i) for i in range(3))
+    meta = {"algo": "none", "comp_len": 40}
+    c.put_wire(k1, b"a" * 40, meta)
+    c.put_wire(k2, b"b" * 40, meta)
+    p, m = c.get_wire(k1)
+    assert p == b"a" * 40 and m["comp_len"] == 40
+    c.put_wire(k3, b"c" * 40, meta)            # budget 100: k2 evicted
+    assert c.get_wire(k2) is None
+    assert c.get_wire(k3)[0] == b"c" * 40
+    assert c.stats()["disk_used"] <= 100
+    files = os.listdir(str(tmp_path / "d"))
+    assert len(files) == 2                     # evicted file deleted
+    c.close()
+    assert os.listdir(str(tmp_path / "d")) == []
+
+
+def test_cache_generation_keying():
+    c = TieredCache(mem_bytes=1 << 10)
+    old = basket_key("p", (1, 2), "b", 0)
+    new = basket_key("p", (1, 3), "b", 0)      # replaced file: new inode
+    c.put_decoded(old, b"stale")
+    assert c.get_decoded(new) is None          # never served across gens
+    assert old != new
+    c.close()
+
+
+def test_client_cache_tiers_round_trip(served):
+    cache = TieredCache(mem_bytes=1 << 20, disk_bytes=1 << 20)
+    with _open(served, cache=cache) as rf:
+        want = rf.read_branch("Jet_eta")       # cold: all misses
+        st0 = cache.stats()
+        assert st0["misses"] > 0
+        np.testing.assert_array_equal(rf.read_branch("Jet_eta"), want)
+        st1 = cache.stats()
+        # warm: served from the cache tiers, no new misses
+        assert st1["misses"] == st0["misses"]
+        assert st1["mem_hits"] > st0["mem_hits"] \
+            or st1["disk_hits"] > st0["disk_hits"]
+        # per-basket path exercises decoded promotion; keys are
+        # endpoint-qualified so same-named files on two servers can
+        # never collide in a shared cache
+        raw0 = rf.read_basket_raw("Jet_eta", 0)
+        key = rf._key("Jet_eta", 0)
+        assert key[0] == f"{rf.host}:{rf.port}/{rf.path}"
+        assert cache.get_decoded(key) == raw0
+        # async spill lands after flush: wire tier has the basket too
+        cache.flush()
+        assert cache.get_wire(key) is not None
+    cache.close()
+
+
+# ---------------------------------------------------------------------------
+# malformed / truncated frames
+# ---------------------------------------------------------------------------
+
+def test_frame_round_trip_and_rejections():
+    import io
+    frame = P.pack_frame(P.REQ_READV, {"path": "x", "baskets": [["b", 0]]},
+                         b"payload")
+    ftype, body, payload = P.read_frame(io.BytesIO(frame))
+    assert (ftype, body["path"], payload) == (P.REQ_READV, "x", b"payload")
+
+    with pytest.raises(P.ProtocolError, match="bad magic"):
+        P.read_frame(io.BytesIO(b"XXXX" + frame[4:]))
+    with pytest.raises(P.ProtocolError, match="truncated"):
+        P.read_frame(io.BytesIO(frame[:10]))
+    with pytest.raises(P.ProtocolError, match="mid-frame"):
+        P.read_frame(io.BytesIO(frame[:-3]))   # truncated payload
+    corrupt = frame[:-3] + bytes([frame[-3] ^ 0xFF]) + frame[-2:]
+    with pytest.raises(P.ProtocolError, match="checksum"):
+        P.read_frame(io.BytesIO(corrupt))
+    with pytest.raises(P.ProtocolError, match="unknown frame type"):
+        P.read_frame(io.BytesIO(frame[:4] + b"\x7f" + frame[5:]))
+    with pytest.raises(EOFError):
+        P.read_frame(io.BytesIO(b""))
+
+
+def test_server_rejects_garbage_connection(served):
+    srv = served["server"]
+    with socket.create_connection((srv.host, srv.port), timeout=10) as s:
+        s.sendall(b"GET / HTTP/1.1\r\nHost: nonsense\r\n\r\n")
+        rf = s.makefile("rb")
+        ftype, body, _ = P.read_frame(rf)
+        assert ftype == P.RESP_ERROR and "protocol" in body["error"]
+        assert rf.read(1) == b""               # server hung up
+
+
+def test_server_error_isolation(served):
+    # a bad request answers an error frame; the connection stays usable
+    with _open(served) as rf:
+        with pytest.raises(RuntimeError, match="no branch"):
+            rf.fetch_wire("nope", [0])
+        with pytest.raises(RuntimeError, match="out of range"):
+            rf.fetch_wire("Jet_pt", [10_000])
+        np.testing.assert_array_equal(
+            rf.read_branch("nJet"),
+            BasketFile(str(served["dir"] / "events.bskt")).read_branch("nJet"))
+
+
+def test_pipeline_resync_after_midstream_error(served):
+    # a pipelined multi-batch fetch whose FIRST batch errors leaves later
+    # batches' responses on the wire; the client must drain them so the
+    # next request doesn't read an orphaned response as its own
+    local = BasketFile(str(served["dir"] / "events.bskt"))
+    with _open(served, wire=None, batch_baskets=1) as rf:
+        with pytest.raises(RuntimeError, match="out of range"):
+            rf.fetch_wire("Jet_pt", [99_999, 0, 1])
+        np.testing.assert_array_equal(rf.read_branch("Jet_pt"),
+                                      local.read_branch("Jet_pt"))
+        np.testing.assert_array_equal(rf.read_branch("nJet"),
+                                      local.read_branch("nJet"))
+    local.close()
+
+
+def test_failed_open_raises_cleanly(served):
+    with pytest.raises(RuntimeError, match="server error"):
+        RemoteBasketFile(served["server"].url("does-not-exist.bskt"))
+
+
+def test_server_rejects_path_escape(served):
+    with _open(served) as rf:
+        rf.path = "../events.bskt"
+        with pytest.raises(RuntimeError, match="invalid path"):
+            rf.fetch_wire("Jet_pt", [0])
+
+
+# ---------------------------------------------------------------------------
+# golden wire blob — the protocol cannot drift silently
+# ---------------------------------------------------------------------------
+
+def _golden_frames() -> bytes:
+    """Canonical frames with fully-pinned contents (no live generation)."""
+    f1 = P.pack_frame(P.REQ_CATALOG, {"path": "events.bskt"})
+    f2 = P.pack_frame(P.REQ_READV, {
+        "path": "events.bskt", "generation": [11, 22],
+        "baskets": [["Jet_pt", 0], ["Jet_pt", 1]],
+        "wire": {"objective": "max_read_tput",
+                 "accept": ["zstd-fast", "lz4", "none"]}})
+    meta = {"algo": "none", "level": 0, "precond": "none", "orig_len": 4,
+            "stored_len": 4, "comp_len": 4, "checksum": 67502338,
+            "entry_start": 0, "entry_count": 1, "has_dict": False}
+    f3 = P.pack_frame(P.RESP_READV, {
+        "path": "events.bskt", "generation": [11, 22],
+        "baskets": [{"branch": "Jet_pt", "index": 0, "len": 4,
+                     "meta": meta}]}, b"\x01\x02\x03\x04")
+    f4 = P.pack_frame(P.RESP_ERROR, {"error": "protocol: bad magic b'XXXX'"})
+    return f1 + f2 + f3 + f4
+
+
+def test_golden_wire_blob():
+    blob = _golden_frames()
+    if not os.path.exists(GOLDEN):      # first run: write the golden
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "wb") as f:
+            f.write(blob)
+    with open(GOLDEN, "rb") as f:
+        assert f.read() == blob, (
+            "wire frames changed byte-for-byte — if the protocol change is "
+            "intentional, bump the RBP magic version and regenerate "
+            "tests/golden/wire_pr5.bin")
+
+
+def test_golden_blob_still_parses():
+    import io
+    r = io.BytesIO(_golden_frames())
+    types = []
+    while True:
+        try:
+            ftype, _body, _payload = P.read_frame(r)
+        except EOFError:
+            break
+        types.append(ftype)
+    assert types == [P.REQ_CATALOG, P.REQ_READV, P.RESP_READV, P.RESP_ERROR]
+
+
+# ---------------------------------------------------------------------------
+# generation staleness (the PR-5 bugfix)
+# ---------------------------------------------------------------------------
+
+def _write_two_generations(tmp_path):
+    p = str(tmp_path / "gen.bskt")
+    arr1 = np.arange(4096, dtype=np.int64)
+    arr2 = arr1 * 3 + 1
+    write_arrays(p, {"x": arr1},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1),
+                 target_basket_bytes=4096)
+    return p, arr1, arr2
+
+
+def test_bfile_pread_raises_on_replaced_file(tmp_path):
+    p, arr1, arr2 = _write_two_generations(tmp_path)
+    f = BasketFile(p)
+    np.testing.assert_array_equal(f.read_branch("x"), arr1)
+    write_arrays(p, {"x": arr2},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1),
+                 target_basket_bytes=4096)      # atomic replace
+    with pytest.raises(fdcache.StaleFileError):
+        f.read_branch("x")
+    f.close()
+    np.testing.assert_array_equal(BasketFile(p).read_branch("x"), arr2)
+
+
+def test_prefetch_reader_raises_on_replaced_file(tmp_path):
+    p, arr1, arr2 = _write_two_generations(tmp_path)
+    f = BasketFile(p)
+    r = PrefetchReader(f, "x", ahead=0, workers=0)
+    np.testing.assert_array_equal(r.read_all(), arr1)
+    write_arrays(p, {"x": arr2},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1),
+                 target_basket_bytes=4096)
+    r2 = PrefetchReader(f, "x", ahead=0, workers=0)  # stale TOC, new inode
+    with pytest.raises(fdcache.StaleFileError):
+        r2.read_all()
+    r.close()
+    r2.close()
+    f.close()
+
+
+def test_server_flips_generation_on_replace(served, tmp_path):
+    td = served["dir"]
+    p = str(td / "flip.bskt")
+    write_arrays(p, {"x": np.arange(1000, dtype=np.int32)},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1))
+    url = served["server"].url("flip.bskt")
+    rf1 = RemoteBasketFile(url)
+    np.testing.assert_array_equal(rf1.read_branch("x"),
+                                  np.arange(1000, dtype=np.int32))
+    write_arrays(p, {"x": np.arange(1000, 2000, dtype=np.int32)},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1))
+    # the old client's generation is now stale: the server refuses rather
+    # than serving baskets sliced with the old TOC
+    with pytest.raises(RuntimeError, match="stale generation"):
+        rf1.fetch_wire("x", [0])
+    rf1.close()
+    rf2 = RemoteBasketFile(url)                # fresh catalog: new data
+    assert rf2.generation != rf1.generation
+    np.testing.assert_array_equal(rf2.read_branch("x"),
+                                  np.arange(1000, 2000, dtype=np.int32))
+    rf2.close()
+
+
+def test_fdcache_generation_api(tmp_path):
+    p = str(tmp_path / "g.bin")
+    with open(p, "wb") as f:
+        f.write(b"RBKT0000" * 4)
+    g1 = fdcache.generation(p)
+    assert fdcache.pread(p, 0, 4, expect=g1) == b"RBKT"
+    os.replace(p + "", p)                      # same inode: still fresh
+    assert fdcache.generation(p) == g1
+    with open(p + ".new", "wb") as f:
+        f.write(b"x" * 32)
+    os.replace(p + ".new", p)
+    assert fdcache.generation(p) != g1
+    with pytest.raises(fdcache.StaleFileError):
+        fdcache.pread(p, 0, 4, expect=g1)
+
+
+# ---------------------------------------------------------------------------
+# idempotent close (the other PR-5 bugfix)
+# ---------------------------------------------------------------------------
+
+def test_bfile_close_idempotent_and_releases_fd(tmp_path):
+    p = str(tmp_path / "c.bskt")
+    write_arrays(p, {"x": np.arange(64, dtype=np.int32)},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1))
+    f = BasketFile(p, prefetch=2)
+    f.read_branch("x")
+    f.close()
+    f.close()                                  # second close: no-op
+    # the fd cache entry is gone: a fresh read reopens cleanly
+    fdcache.invalidate(p)
+    with BasketFile(p) as f2:
+        assert f2.read_branch("x").size == 64
+    f2.close()
+
+
+def test_writer_close_idempotent(tmp_path):
+    p = str(tmp_path / "w.bskt")
+    w = BasketWriter(p)
+    w.write_branch("x", np.arange(10, dtype=np.int32))
+    w.close()
+    w.close()                                  # no-op
+    w.abort()                                  # after close: no-op
+    assert BasketFile(p).read_branch("x").size == 10
+    w2 = BasketWriter(str(tmp_path / "w2.bskt"))
+    w2.abort()
+    w2.abort()                                 # double abort: no-op
+    w2.close()                                 # close after abort: no-op
+    assert not os.path.exists(str(tmp_path / "w2.bskt"))
+
+
+def test_remote_and_server_close_idempotent(served):
+    rf = _open(served)
+    rf.read_branch("run")
+    rf.close()
+    rf.close()
+    srv = BasketServer(str(served["dir"]), workers=0)
+    srv.start()
+    srv.close()
+    srv.close()
+    # bound but never served: close() must not block on shutdown()
+    srv2 = BasketServer(str(served["dir"]), workers=0)
+    srv2.close()
+
+
+# ---------------------------------------------------------------------------
+# concurrency soak
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire", [None, "auto"])
+def test_eight_client_soak(served, wire):
+    local = {n: a for n, a in served["events"].items()}
+    names = list(local)
+    errors = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            cache = TieredCache(mem_bytes=1 << 20, disk_bytes=1 << 20)
+            with _open(served, wire=wire, cache=cache,
+                       batch_baskets=4) as rf:
+                for _ in range(6):
+                    name = names[rng.integers(len(names))]
+                    np.testing.assert_array_equal(rf.read_branch(name),
+                                                  local[name])
+                n = len(local["Jet_pt"])
+                lo = int(rng.integers(0, n - 1))
+                hi = int(rng.integers(lo + 1, n))
+                np.testing.assert_array_equal(
+                    rf.read_entries("Jet_pt", lo, hi), local["Jet_pt"][lo:hi])
+            cache.close()
+        except Exception as e:   # noqa: BLE001 - surfaced below
+            errors.append((seed, e))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+
+
+# ---------------------------------------------------------------------------
+# URL parsing, pipeline integration, CLI
+# ---------------------------------------------------------------------------
+
+def test_parse_format_url():
+    assert P.parse_url("repro://h:9147/a/b.bskt") == ("h", 9147, "a/b.bskt")
+    assert P.format_url("h", 9147, "/a/b.bskt") == "repro://h:9147/a/b.bskt"
+    for bad in ["http://h:1/x", "repro://h/x", "repro://h:1", "repro://:1/x"]:
+        with pytest.raises(ValueError):
+            P.parse_url(bad)
+
+
+def test_token_pipeline_over_repro_urls(tmp_path):
+    from repro.data.pipeline import TokenPipeline, write_token_shards
+    paths = [str(tmp_path / f"s{i}.bskt") for i in range(2)]
+    write_token_shards(paths, vocab=500, tokens_per_shard=20_000)
+    with BasketServer(str(tmp_path), workers=2) as srv:
+        srv.start()
+        urls = [srv.url(os.path.basename(p)) for p in paths]
+        pl_r = TokenPipeline(urls, batch=2, seq_len=64)
+        pl_l = TokenPipeline(paths, batch=2, seq_len=64)
+        try:
+            for _ in range(4):
+                br, bl = next(pl_r), next(pl_l)
+                np.testing.assert_array_equal(br["tokens"], bl["tokens"])
+                np.testing.assert_array_equal(br["targets"], bl["targets"])
+        finally:
+            pl_r.close()
+            pl_l.close()
+
+
+@pytest.mark.slow
+def test_cli_serves_directory(tmp_path):
+    write_event_file(str(tmp_path / "e.bskt"), n_events=200)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.remote", str(tmp_path), "--port", "0",
+         "--workers", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, env=env, text=True)
+    try:
+        line = proc.stdout.readline().strip()
+        assert line.startswith("serving ")
+        hostport = line.rsplit(" on ", 1)[1]
+        with RemoteBasketFile(f"repro://{hostport}/e.bskt") as rf:
+            assert rf.read_branch("run").size == 200
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)

@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Serve a directory of BasketFiles — thin wrapper over
+``python -m repro.remote`` that works from a source checkout without
+PYTHONPATH gymnastics::
+
+    tools/bserve.py /data/shards --port 9147 [--workers N] [--no-transcode]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.remote.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
