@@ -1,0 +1,224 @@
+"""Observability benchmark: instrumentation overhead + access telemetry.
+
+Two stages, both answering "can obs stay default-on?":
+
+* **overhead** — the fig_zerocopy-style quick workload (``save_pytree`` +
+  ``load_pytree`` of a mixed float/int tree) runs with obs enabled and
+  with ``REPRO_OBS`` disabled (``obs.set_enabled`` — same process, same
+  phase, interleaved reps so machine drift cancels), best-of-reps each.
+  The CI gate holds the instrumented run within **2%** (+ a small
+  absolute epsilon for timer jitter) of the disabled run.
+
+* **micro** — per-event instrument costs (counter inc, histogram observe,
+  span enter/exit), enabled vs disabled, in ns/op.  Not gated; the table
+  is the evidence behind the budget.
+
+* **hot-branches** — a fig_remote-style loopback workload: two branches
+  read with deliberately skewed frequency through a ``BasketServer``,
+  then the access telemetry is read back over the RBSP ``STATS`` verb.
+  ``--check`` asserts the per-branch read counters rank the hot branch
+  first and that per-verb latency histograms carry quantiles — the
+  signal the ROADMAP's background repacker consumes.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.checkpoint.manager import load_pytree, save_pytree
+from repro.core.bfile import write_arrays
+from repro.core.codec import CompressionConfig
+from repro.remote import BasketServer, RemoteBasketFile
+from repro.remote.client import fetch_stats
+
+from .common import emit
+
+MB = 1 << 20
+OVERHEAD_BUDGET = 0.02          # the CI gate: <2% on the quick workload
+ABS_EPS_S = 0.010               # timer-jitter floor for very fast runs
+
+
+def _bench_dir():
+    for d in ("/dev/shm", None):
+        if d is None or (os.path.isdir(d) and os.access(d, os.W_OK)):
+            return tempfile.TemporaryDirectory(dir=d, prefix="fig_obs_")
+
+
+def _make_tree(mb: int) -> dict:
+    rng = np.random.default_rng(7)
+    n = mb * MB // 8
+    return {
+        "params": {"w": (rng.normal(0, 0.02, n // 2)
+                         .astype(np.float32).reshape(-1, 256)),
+                   "b": rng.normal(0, 0.02, n // 8).astype(np.float32)},
+        "opt": {"mu": rng.normal(0, 1e-3, n // 2).astype(np.float32),
+                "step": np.arange(n // 8, dtype=np.int64)},
+    }
+
+
+def _workload(td: str, tree: dict) -> None:
+    path = os.path.join(td, "wl.bskt")
+    save_pytree(path, tree, workers=2)
+    load_pytree(path, workers=2)
+
+
+def _overhead_rows(quick: bool) -> list[dict]:
+    reps = 3 if quick else 5
+    tree = _make_tree(4 if quick else 16)
+    t_on = t_off = float("inf")
+    with _bench_dir() as td:
+        _workload(td, tree)                      # warm pools, page cache
+        for _ in range(reps):
+            # interleaved same-phase A/B: drift hits both arms equally
+            prev = obs.set_enabled(False)
+            try:
+                t0 = time.perf_counter()
+                _workload(td, tree)
+                t_off = min(t_off, time.perf_counter() - t0)
+            finally:
+                obs.set_enabled(prev)
+            t0 = time.perf_counter()
+            _workload(td, tree)
+            t_on = min(t_on, time.perf_counter() - t0)
+    pct = (t_on - t_off) / t_off * 100.0
+    rows = []
+    for case, t in [("obs-off", t_off), ("obs-on", t_on)]:
+        rows.append({"bench": "fig_obs", "stage": "overhead", "case": case,
+                     "wall_s": round(t, 4),
+                     "overhead_pct": round(pct, 2) if case == "obs-on" else "",
+                     "value": "", "unit": ""})
+    return rows
+
+
+def _micro_rows() -> list[dict]:
+    n = 200_000
+    rows = []
+    for case, enabled in [("enabled", True), ("disabled", False)]:
+        prev = obs.set_enabled(enabled)
+        try:
+            c = obs.counter("fig_obs.micro")
+            h = obs.histogram("fig_obs.micro_s")
+            t0 = time.perf_counter()
+            for _ in range(n):
+                c.inc()
+            t_c = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            for _ in range(n):
+                h.observe(1e-3)
+            t_h = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            for _ in range(n // 10):
+                with obs.trace.span("fig_obs.micro"):
+                    pass
+            t_s = time.perf_counter() - t0
+        finally:
+            obs.set_enabled(prev)
+        for op, t, m in [("counter.inc", t_c, n), ("hist.observe", t_h, n),
+                         ("trace.span", t_s, n // 10)]:
+            rows.append({"bench": "fig_obs", "stage": "micro",
+                         "case": f"{op}/{case}", "wall_s": "",
+                         "overhead_pct": "",
+                         "value": round(t / m * 1e9, 1), "unit": "ns/op"})
+    obs.trace.clear()           # micro spans must not pollute captures
+    return rows
+
+
+def _hot_branch_rows(quick: bool) -> list[dict]:
+    rows = []
+    size = (4 if quick else 16) * MB
+    rng = np.random.default_rng(11)
+    hot = np.cumsum(rng.integers(1, 9, size // 8)).astype(np.int64)
+    cold = rng.integers(0, 100, size // 32).astype(np.int32)
+    with _bench_dir() as td:
+        write_arrays(os.path.join(td, "events.bskt"),
+                     {"energy": hot, "pid": cold},
+                     cfg_for=lambda n, a: CompressionConfig("zlib", 1,
+                                                            "delta8"),
+                     target_basket_bytes=64 * 1024)
+        with BasketServer(td, workers=4) as srv:
+            srv.start()
+            with RemoteBasketFile(srv.url("events.bskt"), wire=None,
+                                  batch_baskets=64) as rf:
+                for _ in range(5):              # skewed access: energy hot
+                    rf.read_branch("energy")
+                rf.read_branch("pid")
+            body = fetch_stats(srv.host, srv.port)
+    snap = body.get("metrics") or {}
+    from repro.obs.__main__ import _hist_stats, hot_branches
+    for branch, path, _delta, total in hot_branches(
+            snap.get("counters", {}), {}, top=5):
+        rows.append({"bench": "fig_obs", "stage": "hot-branches",
+                     "case": f"reads/{branch}", "wall_s": "",
+                     "overhead_pct": "", "value": total, "unit": "reads"})
+    h = snap.get("hists", {}).get("server.request_s{verb=readv}")
+    if h:
+        n, _mean, p50, p99 = _hist_stats(h)
+        rows.append({"bench": "fig_obs", "stage": "hot-branches",
+                     "case": "readv.p50", "wall_s": "", "overhead_pct": "",
+                     "value": round(p50 * 1e3, 3), "unit": "ms"})
+        rows.append({"bench": "fig_obs", "stage": "hot-branches",
+                     "case": "readv.p99", "wall_s": "", "overhead_pct": "",
+                     "value": round(p99 * 1e3, 3), "unit": "ms"})
+    return rows
+
+
+def run(out_csv: str | None = None, quick: bool = False) -> list[dict]:
+    rows = _overhead_rows(quick) + _micro_rows() + _hot_branch_rows(quick)
+    emit(rows, out_csv)
+    return rows
+
+
+def check(rows: list[dict]) -> int:
+    """CI perf-smoke gate (see module docstring)."""
+    ok = True
+
+    def fail(msg):
+        nonlocal ok
+        print(f"FAIL: {msg}", file=sys.stderr)
+        ok = False
+
+    over = {r["case"]: r for r in rows if r["stage"] == "overhead"}
+    if "obs-on" not in over or "obs-off" not in over:
+        fail("missing overhead rows")
+    else:
+        t_on, t_off = over["obs-on"]["wall_s"], over["obs-off"]["wall_s"]
+        if t_on > t_off * (1.0 + OVERHEAD_BUDGET) + ABS_EPS_S:
+            fail(f"instrumentation overhead {over['obs-on']['overhead_pct']}% "
+                 f"exceeds the {OVERHEAD_BUDGET:.0%} budget "
+                 f"(on={t_on}s off={t_off}s)")
+    reads = [r for r in rows if r["stage"] == "hot-branches"
+             and str(r["case"]).startswith("reads/")]
+    if len(reads) < 2:
+        fail("STATS telemetry returned fewer than 2 per-branch counters")
+    else:
+        ranked = sorted(reads, key=lambda r: -int(r["value"]))
+        if not str(ranked[0]["case"]).endswith("energy"):
+            fail(f"hot branch ranked wrong: {[r['case'] for r in ranked]}")
+    if not any(r["case"] == "readv.p99" for r in rows):
+        fail("missing readv latency quantiles from STATS")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller tree, fewer repeats")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless instrumentation overhead is "
+                         "within budget and STATS telemetry ranks the hot "
+                         "branch (CI perf-smoke)")
+    ap.add_argument("--out", default="artifacts/bench/fig_obs.csv")
+    args = ap.parse_args(argv)
+    rows = run(args.out, quick=args.quick)
+    return check(rows) if args.check else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

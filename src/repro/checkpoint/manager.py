@@ -45,6 +45,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.basket import basket_rows, split_array
 from repro.core.bfile import BasketFile, BasketWriter
 from repro.core.policy import choose
@@ -219,17 +220,25 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
             return lambda: setattr(tuner, "engine", None)
         return lambda: None
 
+    t0 = time.perf_counter()
     if producers <= 1:
-        with BasketWriter(path, workers=workers, tuner=tuner) as w:
+        with obs.trace.span("ckpt.save", cat="ckpt", path=path,
+                            branches=len(flat)), \
+                BasketWriter(path, workers=workers, tuner=tuner) as w:
             unlend = lend_engine(w._engine)
             try:
                 for name in flat:
                     dtype, shape, chunks, cfg = branch_args(name)
-                    _entry_stats(stats, w.write_branch_chunks(
-                        name, dtype=dtype, shape=shape, chunks=chunks, cfg=cfg))
+                    with obs.trace.span("ckpt.write_branch", cat="ckpt",
+                                        branch=name):
+                        _entry_stats(stats, w.write_branch_chunks(
+                            name, dtype=dtype, shape=shape, chunks=chunks,
+                            cfg=cfg))
                 w.write_blob("__meta__", meta_blob)
             finally:
                 unlend()
+        obs.histogram("ckpt.save_s").observe(time.perf_counter() - t0)
+        obs.counter("ckpt.saves").inc()
         return stats
 
     from repro.io.merger import BufferMerger
@@ -237,7 +246,9 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     shards = [names[i::producers] for i in range(producers)]
     errors: list = []
     lock = threading.Lock()
-    with BufferMerger(path, workers=workers, tuner=tuner) as m:
+    with obs.trace.span("ckpt.save", cat="ckpt", path=path,
+                        branches=len(flat)), \
+            BufferMerger(path, workers=workers, tuner=tuner) as m:
         unlend = lend_engine(m._engine)
 
         def produce(shard):
@@ -245,8 +256,11 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
                 for name in shard:
                     buf = m.buffer()
                     dtype, shape, chunks, cfg = branch_args(name)
-                    entry = buf.write_branch_chunks(
-                        name, dtype=dtype, shape=shape, chunks=chunks, cfg=cfg)
+                    with obs.trace.span("ckpt.write_branch", cat="ckpt",
+                                        branch=name):
+                        entry = buf.write_branch_chunks(
+                            name, dtype=dtype, shape=shape, chunks=chunks,
+                            cfg=cfg)
                     m.merge(buf)
                     with lock:
                         _entry_stats(stats, entry)
@@ -267,6 +281,8 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
         buf = m.buffer()
         buf.write_blob("__meta__", meta_blob)
         m.merge(buf)
+    obs.histogram("ckpt.save_s").observe(time.perf_counter() - t0)
+    obs.counter("ckpt.saves").inc()
     return stats
 
 
@@ -283,12 +299,15 @@ def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
     given), so the host copy of each tensor is dropped immediately instead
     of the whole host dict coexisting with the device tree."""
     flat_s = _flatten_with_paths(shardings) if shardings is not None else {}
-    with BasketFile(path, workers=workers, prefetch=prefetch) as f:
+    t0 = time.perf_counter()
+    with obs.trace.span("ckpt.load", cat="ckpt", path=path), \
+            BasketFile(path, workers=workers, prefetch=prefetch) as f:
         meta = json.loads(bytes(f.read_branch("__meta__")).decode())
         bf16 = set(meta.get("bf16", []))
 
         def read(name):
-            arr = f.read_branch(name, workers=workers)
+            with obs.trace.span("ckpt.read_branch", cat="ckpt", branch=name):
+                arr = f.read_branch(name, workers=workers)
             if name in bf16:
                 arr = arr.view(jax.numpy.bfloat16.dtype)
             sh = flat_s.get(name)
@@ -296,6 +315,8 @@ def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
             return jax.device_put(arr, sh) if sh is not None else arr
 
         flat = {n: read(n) for n in f.branch_names() if n != "__meta__"}
+    obs.histogram("ckpt.load_s").observe(time.perf_counter() - t0)
+    obs.counter("ckpt.loads").inc()
     if template is None:
         return flat, meta
 

@@ -30,6 +30,7 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core import CompressionConfig
 from repro.core.bfile import BasketFile, BasketWriter
 from repro.core.policy import choose
@@ -138,12 +139,15 @@ class TokenPipeline:
                                     ahead=self.prefetch_baskets,
                                     engine=self._io_engine)
             try:
-                toks = reader.read_all()
+                with obs.trace.span("pipeline.shard", cat="data", path=path,
+                                    remote=remote):
+                    toks = reader.read_all()
             finally:
                 reader.close()
         finally:
             if remote:
                 bfile.close()
+        obs.counter("pipeline.shards", remote=str(remote).lower()).inc()
         w = self.seq_len + 1
         n_win = toks.size // w
         return toks[: n_win * w].reshape(n_win, w)
@@ -186,6 +190,7 @@ class TokenPipeline:
                     cursor = {"epoch": epoch, "file_idx": file_idx,
                               "window_idx": wi + self.batch, "seed": self.seed}
                     self._q.put((batch, cursor))
+                    obs.gauge("pipeline.queue_depth").set(self._q.qsize())
                     wi += self.batch
                 window_idx = 0
                 file_idx += 1
@@ -232,6 +237,7 @@ class TokenPipeline:
         if isinstance(item, Exception):
             raise item
         batch, cursor = item
+        obs.counter("pipeline.batches").inc()
         # the cursor of the batch just handed out = state to persist
         self.epoch = cursor["epoch"]
         self.file_idx = cursor["file_idx"]

@@ -59,6 +59,7 @@ from typing import Iterable, Iterator, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core import basket as _basket
 from repro.core import codec as _codec
 
@@ -78,10 +79,23 @@ def cpu_count() -> int:
 # module-level task bodies (picklable, so the process backend can run them)
 # ---------------------------------------------------------------------------
 
-def _pack_task(raw, cfg_fields: tuple, start: int, count: int):
-    cfg = _codec.CompressionConfig(*cfg_fields)
+def _obs_pack(raw, cfg, start: int, count: int):
+    """pack_basket with stage telemetry.  Runs in whichever worker executes
+    the task: thread workers hit the parent registry directly; process
+    workers hit their own, folded back by :meth:`CompressionEngine.collect_obs`."""
+    t0 = time.perf_counter()
     payload, meta = _basket.pack_basket(raw, cfg, entry_start=start,
                                         entry_count=count)
+    obs.histogram("engine.pack_s", algo=cfg.algo).observe(
+        time.perf_counter() - t0)
+    obs.counter("engine.pack.bytes_in", algo=cfg.algo).inc(meta.orig_len)
+    obs.counter("engine.pack.bytes_out", algo=cfg.algo).inc(meta.comp_len)
+    return payload, meta
+
+
+def _pack_task(raw, cfg_fields: tuple, start: int, count: int):
+    cfg = _codec.CompressionConfig(*cfg_fields)
+    payload, meta = _obs_pack(raw, cfg, start, count)
     return start, count, payload, meta
 
 
@@ -94,8 +108,7 @@ def _pack_task_shm(slab_name: str, nbytes: int, cfg_fields: tuple,
     exceeded), which the parent handles transparently."""
     raw = _shmem.attach_view(slab_name, nbytes)
     cfg = _codec.CompressionConfig(*cfg_fields)
-    payload, meta = _basket.pack_basket(raw, cfg, entry_start=start,
-                                        entry_count=count)
+    payload, meta = _obs_pack(raw, cfg, start, count)
     if payload is raw:          # identity config: content already in place
         return start, count, nbytes, meta
     n = _shmem.write_back(slab_name, payload)
@@ -105,7 +118,13 @@ def _pack_task_shm(slab_name: str, nbytes: int, cfg_fields: tuple,
 
 
 def _measure_trial(sample, cfg: "_codec.CompressionConfig", reps: int):
-    """Timed compress + decompress-into of one payload (best-of-reps)."""
+    """Timed compress + decompress-into of one payload (best-of-reps).
+
+    Each measurement lands in the obs registry — per-algo rate histograms
+    plus a trial counter — so calibration evidence is inspectable after
+    the fact (obstat / STATS) instead of collapsing into one returned
+    number.  The return value is still the best-of-reps cost-model point
+    the tuner selects on."""
     t_c = float("inf")
     payload = meta = None
     for _ in range(reps):
@@ -119,6 +138,13 @@ def _measure_trial(sample, cfg: "_codec.CompressionConfig", reps: int):
         _basket.unpack_basket_into(payload, meta, out, cfg.dictionary,
                                    verify=False)
         t_d = min(t_d, time.perf_counter() - t0)
+    obs.counter("tune.trials", algo=cfg.algo).inc()
+    obs.histogram("tune.trial_s", algo=cfg.algo).observe(t_c + t_d)
+    mb = meta.orig_len / 1e6
+    if t_c > 0:
+        obs.histogram("tune.trial.comp_mbps", algo=cfg.algo).observe(mb / t_c)
+    if t_d > 0:
+        obs.histogram("tune.trial.decomp_mbps", algo=cfg.algo).observe(mb / t_d)
     return meta.orig_len, meta.comp_len, t_c, t_d
 
 
@@ -161,7 +187,12 @@ def _unpack_task(path: str, offset: int, meta_json: dict,
                  ident: Optional[tuple] = None) -> bytes:
     meta = _basket.BasketMeta.from_json(meta_json)
     payload = _fdcache.pread(path, offset, meta.comp_len, expect=ident)
-    return _basket.unpack_basket(payload, meta, dictionary, verify=verify)
+    t0 = time.perf_counter()
+    raw = _basket.unpack_basket(payload, meta, dictionary, verify=verify)
+    obs.histogram("engine.unpack_s", algo=meta.algo).observe(
+        time.perf_counter() - t0)
+    obs.counter("engine.unpack.bytes_out", algo=meta.algo).inc(meta.orig_len)
+    return raw
 
 
 def _unpack_task_into(path: str, offset: int, meta_json: dict,
@@ -171,8 +202,13 @@ def _unpack_task_into(path: str, offset: int, meta_json: dict,
     destination slice — the thread-pool / serial scatter path)."""
     meta = _basket.BasketMeta.from_json(meta_json)
     payload = _fdcache.pread(path, offset, meta.comp_len, expect=ident)
-    return _basket.unpack_basket_into(payload, meta, out, dictionary,
-                                      verify=verify)
+    t0 = time.perf_counter()
+    n = _basket.unpack_basket_into(payload, meta, out, dictionary,
+                                   verify=verify)
+    obs.histogram("engine.unpack_s", algo=meta.algo).observe(
+        time.perf_counter() - t0)
+    obs.counter("engine.unpack.bytes_out", algo=meta.algo).inc(meta.orig_len)
+    return n
 
 
 def _unpack_task_shm(path: str, offset: int, meta_json: dict,
@@ -195,6 +231,16 @@ def _warm_task(delay: float = 0.0):
     if delay:
         time.sleep(delay)
     return None
+
+
+def _obs_snapshot_task(delay: float = 0.0):
+    """Worker body for metric folding: each process worker returns (and
+    zeroes) its own registry's delta snapshot.  The sleep is the warmup
+    trick — N sleeping tasks for N workers means one eager worker can't
+    answer them all, so every worker gets drained."""
+    if delay:
+        time.sleep(delay)
+    return obs.snapshot(reset=True)
 
 
 def _completed_future(fn, *args) -> Future:
@@ -351,7 +397,27 @@ class CompressionEngine:
                       for _ in range(self.workers)]:
                 f.result()
 
+    def collect_obs(self, delay: float = 0.05) -> None:
+        """Fold process-pool workers' metric deltas into this process's
+        registry.  Thread workers already share it; only the forkserver
+        children have private registries.  Safe to call repeatedly — the
+        workers' snapshots are reset-deltas, so nothing double-counts."""
+        if not obs.enabled():
+            return
+        with self._lock:
+            pool = self._proc_pool
+        if pool is None:
+            return
+        try:
+            futs = [pool.submit(_obs_snapshot_task, delay)
+                    for _ in range(self.workers)]
+            for f in futs:
+                obs.merge(f.result())
+        except Exception:   # broken pool at teardown: telemetry is advisory
+            pass
+
     def close(self) -> None:
+        self.collect_obs()
         with self._lock:
             self._closed = True
             pools = [p for p in (self._thread_pool, self._proc_pool) if p]
@@ -397,6 +463,7 @@ class CompressionEngine:
                 yield submit_one(None, it)
             return
         pending: deque[Future] = deque()
+        depth = obs.gauge("engine.inflight")
         it = iter(items)
         exhausted = False
         try:
@@ -408,9 +475,11 @@ class CompressionEngine:
                         exhausted = True
                         break
                     pending.append(submit_one(pool, item))
+                depth.set(len(pending))
                 if pending:
                     yield pending.popleft().result()
         finally:
+            depth.set(0)
             for f in pending:
                 self._drain(f)
 
@@ -465,6 +534,7 @@ class CompressionEngine:
         the payload back.  Yielded payloads may view the slab — the slab is
         recycled when the generator is advanced."""
         pending: deque = deque()    # (future, slab | None)
+        depth = obs.gauge("engine.inflight")
         it = iter(chunks)
         exhausted = False
         inline = self.inline_bytes
@@ -490,6 +560,7 @@ class CompressionEngine:
                         slabs.release(slab)
                         raise
                     pending.append((fut, slab))
+                depth.set(len(pending))
                 if pending:
                     fut, slab = pending.popleft()
                     try:
@@ -513,6 +584,7 @@ class CompressionEngine:
                     finally:
                         slabs.release(slab)
         finally:
+            depth.set(0)
             for fut, slab in pending:
                 self._drain(fut)
                 if slab is not None:

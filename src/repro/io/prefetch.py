@@ -41,6 +41,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.basket import BasketMeta, byte_offsets
 
 from .engine import CompressionEngine
@@ -132,11 +133,20 @@ class PrefetchReader:
         decompression of work already in flight; an index already cached
         (even if still decompressing — i.e. prefetched in time) is a hit."""
         with self._lock:
+            hits = 0
             for i in indices:
                 cached = i in self._cache
-                self.hits += cached
-                self.misses += not cached
-            return self._schedule_many(indices)
+                hits += cached
+            misses = len(indices) - hits
+            self.hits += hits
+            self.misses += misses
+            futs = self._schedule_many(indices)
+        # mirror into obs as one batched add per wave, not per basket
+        if hits:
+            obs.counter("prefetch.requests", event="hit").inc(hits)
+        if misses:
+            obs.counter("prefetch.requests", event="miss").inc(misses)
+        return futs
 
     def _trim(self) -> None:
         """Shrink the cache back to ``cache_baskets`` (oldest completed
@@ -228,6 +238,10 @@ class PrefetchReader:
                 else:
                     self.misses += 1
                     missing.append(i)
+        if cached_tasks:
+            obs.counter("prefetch.requests", event="hit").inc(len(cached_tasks))
+        if missing:
+            obs.counter("prefetch.requests", event="miss").inc(len(missing))
         if self._source is not None:
             into_futs = list(zip(missing, self._submit(missing))) if missing else []
             for i, fut in cached_tasks + into_futs:

@@ -1,0 +1,199 @@
+"""obstat — the observability CLI (``python -m repro.obs``).
+
+Three modes against a live :class:`repro.remote.BasketServer` (all over
+the RBSP ``STATS`` verb — no container path needed, just host:port):
+
+one-shot dump (default)::
+
+    python -m repro.obs HOST:PORT            # rendered
+    python -m repro.obs HOST:PORT --json     # raw snapshot JSON
+
+watch (top-N hot branches + per-verb request latency, delta per tick)::
+
+    python -m repro.obs HOST:PORT --watch [--top 10] [--interval 2]
+
+trace capture window (drain, wait, drain -> Chrome trace JSON)::
+
+    python -m repro.obs HOST:PORT --trace out.json [--duration 5]
+
+Without a target, the one-shot mode dumps *this* process's registry —
+mostly useful under ``python -m repro.obs --json`` in scripts and tests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.obs import REGISTRY, metrics, trace
+
+
+def _parse_target(target: str) -> tuple[str, int]:
+    host, _, port = target.rpartition(":")
+    if not host or not port.isdigit():
+        raise SystemExit(f"target must be HOST:PORT, got {target!r}")
+    return host, int(port)
+
+
+def _fetch(target: str, want_trace: bool = False) -> dict:
+    from repro.remote.client import fetch_stats
+    host, port = _parse_target(target)
+    return fetch_stats(host, port, trace=want_trace)
+
+
+def _hist_stats(h: dict) -> tuple[int, float, float, float]:
+    n = int(h.get("count", 0))
+    mean = h.get("sum", 0.0) / n if n else 0.0
+    b = h.get("buckets", {})
+    return (n, mean, metrics.quantile_from_buckets(b, 0.50),
+            metrics.quantile_from_buckets(b, 0.99))
+
+
+def _hist_delta(cur: dict, prev: dict) -> dict:
+    """Per-tick histogram delta (counts can only grow)."""
+    pb = prev.get("buckets", {})
+    buckets = {k: int(v) - int(pb.get(k, 0))
+               for k, v in cur.get("buckets", {}).items()
+               if int(v) - int(pb.get(k, 0)) > 0}
+    return {"count": int(cur.get("count", 0)) - int(prev.get("count", 0)),
+            "sum": float(cur.get("sum", 0.0)) - float(prev.get("sum", 0.0)),
+            "buckets": buckets}
+
+
+def hot_branches(counters: dict, prev: dict, top: int) -> list[tuple]:
+    """Top-N ``server.reads{...}`` rows by this tick's delta (total read
+    count breaks ties, so a cold tick still shows the historical ranking).
+    Returns ``[(branch, path, delta, total), ...]``."""
+    rows = []
+    for key, total in counters.items():
+        name, labels = metrics.parse_key(key)
+        if name != "server.reads":
+            continue
+        delta = int(total) - int(prev.get(key, 0))
+        rows.append((labels.get("branch", "?"), labels.get("path", "?"),
+                     delta, int(total)))
+    rows.sort(key=lambda r: (-r[2], -r[3], r[0]))
+    return rows[:top]
+
+
+def _render_watch(snap: dict, prev_snap: dict, body: dict, top: int,
+                  interval: float) -> str:
+    lines = [f"repro.obs watch — gen {body.get('gen')} pid {body.get('pid')} "
+             f"uptime {body.get('uptime_s', 0.0):.0f}s "
+             f"(tick {interval:g}s)"]
+    srv = body.get("server") or {}
+    if srv:
+        lines.append("  " + "  ".join(f"{k}={v}" for k, v in sorted(srv.items())))
+    lines.append("")
+    lines.append(f"  hot branches (top {top}, reads/tick):")
+    rows = hot_branches(snap.get("counters", {}),
+                        prev_snap.get("counters", {}), top)
+    if not rows:
+        lines.append("    (no reads yet)")
+    for branch, path, delta, total in rows:
+        lines.append(f"    {branch:<24} {path:<28} +{delta:<8} total {total}")
+    lines.append("")
+    lines.append("  request latency (per verb, this tick):")
+    hists = snap.get("hists", {})
+    prev_h = prev_snap.get("hists", {})
+    any_verb = False
+    for key in sorted(hists):
+        name, labels = metrics.parse_key(key)
+        if name != "server.request_s":
+            continue
+        d = _hist_delta(hists[key], prev_h.get(key, {}))
+        n, mean, p50, p99 = _hist_stats(d if d["count"] else hists[key])
+        scope = "tick" if d["count"] else "all"
+        lines.append(f"    {labels.get('verb', '?'):<8} n={n:<7} ({scope}) "
+                     f"mean={mean * 1e3:.3f}ms p50={p50 * 1e3:.3f}ms "
+                     f"p99={p99 * 1e3:.3f}ms")
+        any_verb = True
+    if not any_verb:
+        lines.append("    (no requests yet)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="dump / watch / trace repro observability "
+                    "(RBSP STATS verb)")
+    ap.add_argument("target", nargs="?", default=None,
+                    help="HOST:PORT of a live BasketServer "
+                         "(omit: dump this process's registry)")
+    ap.add_argument("--json", action="store_true",
+                    help="raw snapshot JSON instead of rendered text")
+    ap.add_argument("--watch", action="store_true",
+                    help="refresh a top-N hot-branch / latency view")
+    ap.add_argument("--top", type=int, default=10, metavar="N",
+                    help="branches shown in --watch (default 10)")
+    ap.add_argument("--interval", type=float, default=2.0, metavar="S",
+                    help="--watch poll period (default 2s)")
+    ap.add_argument("--count", type=int, default=0, metavar="N",
+                    help="stop --watch after N ticks (0 = forever)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="capture a span window to Chrome trace JSON")
+    ap.add_argument("--duration", type=float, default=5.0, metavar="S",
+                    help="--trace capture window (default 5s)")
+    args = ap.parse_args(argv)
+
+    if args.trace is not None:
+        if args.target is None:
+            time.sleep(args.duration)
+            n = trace.export_chrome(args.trace)
+        else:
+            _fetch(args.target, want_trace=True)     # discard pre-window
+            time.sleep(args.duration)
+            body = _fetch(args.target, want_trace=True)
+            n = trace.export_chrome(args.trace,
+                                    events=body.get("trace_events") or [])
+        print(f"wrote {n} trace events to {args.trace}")
+        return 0
+
+    if args.watch:
+        if args.target is None:
+            ap.error("--watch needs a HOST:PORT target")
+        prev: dict = {}
+        tick = 0
+        try:
+            while True:
+                body = _fetch(args.target)
+                snap = body.get("metrics") or {}
+                out = _render_watch(snap, prev, body, args.top, args.interval)
+                # ANSI clear+home when interactive; plain append otherwise
+                if sys.stdout.isatty():
+                    sys.stdout.write("\x1b[2J\x1b[H")
+                print(out, flush=True)
+                prev = snap
+                tick += 1
+                if args.count and tick >= args.count:
+                    return 0
+                time.sleep(args.interval)
+        except KeyboardInterrupt:
+            return 0
+
+    if args.target is None:
+        snap = REGISTRY.snapshot()
+        body = {"metrics": snap}
+    else:
+        body = _fetch(args.target)
+        snap = body.get("metrics") or {}
+    if args.json:
+        json.dump(body, sys.stdout, sort_keys=True)
+        print()
+    else:
+        if "gen" in body:
+            print(f"# gen {body['gen']} pid {body.get('pid')} "
+                  f"uptime {body.get('uptime_s', 0.0):.0f}s")
+        for k, v in sorted((body.get("server") or {}).items()):
+            print(f"server.{k} {v}")
+        rendered = REGISTRY.render(snap)
+        if rendered:
+            print(rendered)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,154 @@
+"""Span-based tracing with Chrome trace-event export.
+
+``span("engine.pack", algo="zstd")`` wraps a region of code; completed
+spans land in a bounded ring buffer (oldest dropped first, so a
+long-running server keeps the *recent* window, which is the one a
+``--trace`` capture wants).  :func:`export_chrome` writes the ring as
+Chrome trace-event JSON (``{"traceEvents": [...]}``) loadable in
+Perfetto / ``chrome://tracing``.
+
+Timestamps are microseconds from a module-load ``perf_counter_ns`` epoch,
+so spans from one process line up on one timeline.  Thread-pool workers
+share the parent's ring; *process*-pool workers have their own ring that
+stays in the child (folding variable-size span lists through the pool
+result channel would cost more than the data is worth) — only their
+metrics fold back.  The enable gate is shared with metrics
+(``REPRO_OBS=off`` / :func:`repro.obs.metrics.set_enabled`).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+from repro.obs import metrics as _metrics
+
+__all__ = ["span", "instant", "drain", "events", "export_chrome",
+           "set_capacity", "clear"]
+
+_EPOCH_NS = time.perf_counter_ns()
+_DEFAULT_CAPACITY = 65536
+
+_lock = threading.Lock()
+_ring: deque = deque(maxlen=_DEFAULT_CAPACITY)
+_thread_names: dict[int, str] = {}
+
+
+def _now_us() -> float:
+    return (time.perf_counter_ns() - _EPOCH_NS) / 1e3
+
+
+def set_capacity(n: int) -> None:
+    """Resize the ring (keeps the newest events)."""
+    global _ring
+    with _lock:
+        _ring = deque(_ring, maxlen=int(n))
+
+
+def clear() -> None:
+    with _lock:
+        _ring.clear()
+
+
+def _note_thread() -> int:
+    t = threading.current_thread()
+    tid = t.ident or 0
+    if tid not in _thread_names:
+        _thread_names[tid] = t.name
+    return tid
+
+
+class _Span:
+    __slots__ = ("name", "cat", "args", "_t0")
+
+    def __init__(self, name: str, cat: str, args: dict):
+        self.name = name
+        self.cat = cat
+        self.args = args
+
+    def __enter__(self):
+        self._t0 = _now_us()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        t1 = _now_us()
+        if exc_type is not None:
+            self.args = dict(self.args, error=exc_type.__name__)
+        ev = {"name": self.name, "cat": self.cat, "ph": "X",
+              "ts": self._t0, "dur": t1 - self._t0,
+              "pid": os.getpid(), "tid": _note_thread()}
+        if self.args:
+            ev["args"] = self.args
+        with _lock:
+            _ring.append(ev)
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def span(name: str, cat: str = "repro", **args):
+    """Context manager recording one complete ("X") trace event."""
+    if not _metrics.enabled():
+        return _NULL_SPAN
+    return _Span(name, cat, args)
+
+
+def instant(name: str, cat: str = "repro", **args) -> None:
+    """Record a zero-duration marker event."""
+    if not _metrics.enabled():
+        return
+    ev = {"name": name, "cat": cat, "ph": "i", "s": "t",
+          "ts": _now_us(), "pid": os.getpid(), "tid": _note_thread()}
+    if args:
+        ev["args"] = args
+    with _lock:
+        _ring.append(ev)
+
+
+def events() -> list[dict]:
+    """Copy of the current ring (oldest first), ring left intact."""
+    with _lock:
+        return list(_ring)
+
+
+def drain() -> list[dict]:
+    """Pop every buffered event (the STATS-verb transport: each event
+    crosses the wire exactly once)."""
+    with _lock:
+        out = list(_ring)
+        _ring.clear()
+    return out
+
+
+def export_chrome(path: str, events: Optional[list] = None) -> int:
+    """Write Chrome trace-event JSON; returns the event count.
+
+    ``events=None`` drains the live ring; passing an explicit list (e.g.
+    one shipped over STATS, or a synthetic one in tests) exports that
+    instead.  Thread-name metadata ("M" events) is emitted for every tid
+    seen so Perfetto shows "prefetch-0" instead of a bare id."""
+    evs = drain() if events is None else list(events)
+    tids = {(e.get("pid"), e.get("tid")) for e in evs if "tid" in e}
+    meta = [{"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+             "args": {"name": _thread_names.get(tid, f"tid-{tid}")}}
+            for pid, tid in sorted(tids, key=lambda x: (str(x[0]), str(x[1])))]
+    doc = {"traceEvents": meta + evs, "displayTimeUnit": "ms"}
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f)
+    os.replace(tmp, path)
+    return len(evs)

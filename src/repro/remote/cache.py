@@ -37,6 +37,8 @@ import threading
 from collections import OrderedDict
 from typing import Optional
 
+from repro import obs
+
 __all__ = ["TieredCache", "basket_key"]
 
 
@@ -73,7 +75,9 @@ class TieredCache:
             else:
                 self._dir = str(disk_dir)
                 os.makedirs(self._dir, exist_ok=True)
-        # stats
+        # stats: the per-instance ints below are canonical (stats() reads
+        # them under the lock); the obs registry carries the process-wide
+        # mirror, bumped per event outside the lock
         self.mem_hits = 0
         self.disk_hits = 0
         self.misses = 0
@@ -86,13 +90,16 @@ class TieredCache:
             if raw is not None:
                 self._mem.move_to_end(key)
                 self.mem_hits += 1
-                return raw
+        if raw is not None:
+            obs.counter("client.cache", tier="mem", event="hit").inc()
+            return raw
         return None
 
     def put_decoded(self, key: tuple, raw: bytes) -> None:
         raw = bytes(raw)
         if not self.mem_bytes or len(raw) > self.mem_bytes:
             return
+        evicted = 0
         with self._lock:
             old = self._mem.pop(key, None)
             if old is not None:
@@ -102,6 +109,11 @@ class TieredCache:
             while self._mem_used > self.mem_bytes and self._mem:
                 _k, v = self._mem.popitem(last=False)
                 self._mem_used -= len(v)
+                evicted += 1
+            used = self._mem_used
+        if evicted:
+            obs.counter("client.cache", tier="mem", event="evict").inc(evicted)
+        obs.gauge("client.cache_used", tier="mem").set(used)
 
     # -- wire tier -------------------------------------------------------
 
@@ -129,6 +141,7 @@ class TieredCache:
             return None
         with self._lock:
             self.disk_hits += 1
+        obs.counter("client.cache", tier="disk", event="hit").inc()
         return payload, dict(meta)
 
     def put_wire(self, key: tuple, payload, meta_json: dict) -> None:
@@ -156,6 +169,11 @@ class TieredCache:
                 _k, (fn, sz, _m) = self._disk.popitem(last=False)
                 self._disk_used -= sz
                 evict.append(fn)
+            used = self._disk_used
+        if evict:
+            obs.counter("client.cache", tier="disk",
+                        event="evict").inc(len(evict))
+        obs.gauge("client.cache_used", tier="disk").set(used)
         for fn in evict:
             try:
                 os.remove(fn)
@@ -205,8 +223,11 @@ class TieredCache:
     def record_miss(self) -> None:
         with self._lock:
             self.misses += 1
+        obs.counter("client.cache", event="miss").inc()
 
     def stats(self) -> dict:
+        """Consistent snapshot: every counter and byte total is read under
+        the one lock, so hits/used/items always describe the same instant."""
         with self._lock:
             return {"mem_hits": self.mem_hits, "disk_hits": self.disk_hits,
                     "misses": self.misses, "mem_used": self._mem_used,

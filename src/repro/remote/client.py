@@ -32,11 +32,13 @@ import base64
 import queue
 import socket
 import threading
+import time
 from concurrent.futures import Future
 from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.basket import (BasketMeta, byte_offsets, join_baskets,
                                unpack_basket, unpack_basket_into)
 
@@ -44,12 +46,33 @@ from . import protocol as P
 from .cache import TieredCache, basket_key
 from .transcode import DEFAULT_ACCEPT
 
-__all__ = ["RemoteBasketFile", "connect"]
+__all__ = ["RemoteBasketFile", "connect", "fetch_stats"]
 
 
 def connect(url: str, **kw) -> "RemoteBasketFile":
     """Open a ``repro://host:port/path`` URL."""
     return RemoteBasketFile(url, **kw)
+
+
+def fetch_stats(host: str, port: int, *, trace: bool = False,
+                timeout: float = 10.0) -> dict:
+    """One STATS round-trip against a bare ``host:port`` — no catalog, no
+    container path, so a monitor (``python -m repro.obs``) can poll any
+    live server without knowing what it exports."""
+    sock = socket.create_connection((host, int(port)), timeout=timeout)
+    try:
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        rfile = sock.makefile("rb")
+        body = {"trace": True} if trace else {}
+        sock.sendall(P.pack_frame(P.REQ_STATS, body))
+        ftype, rbody, _payload = P.read_frame(rfile)
+        if ftype == P.RESP_ERROR:
+            raise RuntimeError(f"server error: {rbody.get('error')}")
+        if ftype != P.RESP_STATS:
+            raise P.ProtocolError(f"expected frame {P.RESP_STATS}, got {ftype}")
+        return rbody
+    finally:
+        sock.close()
 
 
 class RemoteBasketFile:
@@ -145,10 +168,13 @@ class RemoteBasketFile:
     # -- wire ------------------------------------------------------------
 
     def _send(self, ftype: int, body: dict) -> None:
-        self._sock.sendall(P.pack_frame(ftype, body))
+        frame = P.pack_frame(ftype, body)
+        obs.counter("rbsp.tx_bytes").inc(len(frame))
+        self._sock.sendall(frame)
 
     def _recv(self, want: int) -> tuple[dict, bytes]:
         ftype, body, payload = P.read_frame(self._rfile)
+        obs.counter("rbsp.rx_payload_bytes").inc(len(payload))
         if ftype == P.RESP_ERROR:
             raise RuntimeError(f"server error: {body.get('error')}")
         if ftype != want:
@@ -159,13 +185,27 @@ class RemoteBasketFile:
                  ) -> tuple[dict, bytes]:
         if want is None:
             want = {P.REQ_CATALOG: P.RESP_CATALOG, P.REQ_READV: P.RESP_READV,
-                    P.REQ_PING: P.RESP_PING}[ftype]
-        with self._io_lock:
-            self._send(ftype, body)
-            return self._recv(want)
+                    P.REQ_PING: P.RESP_PING,
+                    P.REQ_STATS: P.RESP_STATS}[ftype]
+        verb = P.VERB_NAMES.get(ftype, str(ftype))
+        t0 = time.perf_counter()
+        with obs.trace.span("rbsp.request", cat="client", verb=verb):
+            with self._io_lock:
+                self._send(ftype, body)
+                out = self._recv(want)
+        obs.histogram("rbsp.rtt_s", verb=verb).observe(
+            time.perf_counter() - t0)
+        return out
 
     def ping(self) -> bool:
         return bool(self._request(P.REQ_PING, {})[0].get("ok"))
+
+    def server_stats(self, trace: bool = False) -> dict:
+        """The server's STATS snapshot over this connection (DESIGN.md
+        §13): generation-stamped obs registry + server stats dict;
+        ``trace=True`` also drains the server's span ring."""
+        body = {"trace": True} if trace else {}
+        return self._request(P.REQ_STATS, body)[0]
 
     def _readv_body(self, name: str, idxs: Sequence[int]) -> dict:
         return {"path": self.path, "generation": list(self.generation),
@@ -219,7 +259,10 @@ class RemoteBasketFile:
         groups = [idxs[i:i + self.batch_baskets]
                   for i in range(0, len(idxs), self.batch_baskets)]
         out: list[tuple[bytes, dict]] = []
-        with self._io_lock:
+        wait_h = obs.histogram("rbsp.readv_wait_s")
+        with obs.trace.span("rbsp.fetch_wire", cat="client", branch=name,
+                            baskets=len(idxs), batches=len(groups)), \
+                self._io_lock:
             # pipeline: request g+1 is on the wire while we block on g's
             # response — the server answers a connection's requests in
             # order, so responses arrive in group order
@@ -233,7 +276,8 @@ class RemoteBasketFile:
                                    self._readv_body(name, groups[g + 1]))
                         sent += 1
                     try:
-                        body, payload = self._recv(P.RESP_READV)
+                        with wait_h.time():
+                            body, payload = self._recv(P.RESP_READV)
                     finally:
                         # _recv consumed one frame even when it raised on
                         # a RESP_ERROR; only a transport/framing failure

@@ -24,7 +24,14 @@ Frame types::
                    [[branch, index], ...], "wire": null
                    | {"objective", "accept"}}
     REQ_PING      {}                                     -> RESP_PING
+    REQ_STATS     {} | {"trace": true}                   -> RESP_STATS
     RESP_ERROR    {"error"}   (any request may answer this)
+
+``REQ_STATS`` is the observability verb (DESIGN.md §13): the server
+answers with a generation-stamped canonical-JSON snapshot of its obs
+registry plus the per-server ``stats`` dict — no path required, so a
+monitor can point at a bare host:port.  ``"trace": true`` additionally
+drains the server's span ring into ``"trace_events"``.
 
 ``REQ_READV`` is the vectored read: many (branch, basket) ranges per
 round-trip.  The server coalesces them into large sequential ``pread``s
@@ -43,8 +50,9 @@ from repro.core.checksum import adler32_hw
 
 __all__ = [
     "MAGIC", "ProtocolError",
-    "REQ_CATALOG", "REQ_READV", "REQ_PING",
-    "RESP_CATALOG", "RESP_READV", "RESP_PING", "RESP_ERROR",
+    "REQ_CATALOG", "REQ_READV", "REQ_PING", "REQ_STATS",
+    "RESP_CATALOG", "RESP_READV", "RESP_PING", "RESP_STATS", "RESP_ERROR",
+    "VERB_NAMES",
     "pack_frame", "read_frame", "recv_exact",
     "coalesce", "parse_url", "format_url",
 ]
@@ -56,14 +64,20 @@ _HEADER = struct.Struct("<4sBIQI")       # magic, type, body_len, payload_len, p
 REQ_CATALOG = 1
 REQ_READV = 2
 REQ_PING = 3
+REQ_STATS = 4
 # response types
 RESP_CATALOG = 16
 RESP_READV = 17
 RESP_PING = 18
+RESP_STATS = 19
 RESP_ERROR = 31
 
-_TYPES = {REQ_CATALOG, REQ_READV, REQ_PING,
-          RESP_CATALOG, RESP_READV, RESP_PING, RESP_ERROR}
+_TYPES = {REQ_CATALOG, REQ_READV, REQ_PING, REQ_STATS,
+          RESP_CATALOG, RESP_READV, RESP_PING, RESP_STATS, RESP_ERROR}
+
+# human-readable verb names for metric labels and error log lines
+VERB_NAMES = {REQ_CATALOG: "catalog", REQ_READV: "readv",
+              REQ_PING: "ping", REQ_STATS: "stats"}
 
 # sanity bounds: a malformed header must fail fast, not allocate gigabytes
 MAX_BODY = 64 << 20

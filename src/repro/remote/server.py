@@ -31,8 +31,10 @@ import logging
 import os
 import socketserver
 import threading
+import time
 from typing import Optional
 
+from repro import obs
 from repro.core.bfile import BasketFile
 from repro.io import fdcache
 from repro.io.engine import CompressionEngine
@@ -63,6 +65,8 @@ class _Catalog:
 class _Handler(socketserver.StreamRequestHandler):
     def handle(self):
         srv: "BasketServer" = self.server.basket_server
+        peer = "%s:%s" % (self.client_address[0], self.client_address[1])
+        seq = 0                     # per-connection request sequence
         while True:
             try:
                 ftype, body, _payload = P.read_frame(self.rfile)
@@ -71,23 +75,35 @@ class _Handler(socketserver.StreamRequestHandler):
             except P.ProtocolError as e:
                 # malformed frame: answer once, then drop the connection —
                 # framing is gone, nothing later on this stream is trusted
+                obs.counter("server.errors", verb="protocol").inc()
                 self._reply(P.RESP_ERROR, {"error": f"protocol: {e}"})
                 return
+            seq += 1
+            verb = P.VERB_NAMES.get(ftype, str(ftype))
+            t0 = time.perf_counter()
             try:
-                if ftype == P.REQ_PING:
-                    self._reply(P.RESP_PING, {"ok": True})
-                elif ftype == P.REQ_CATALOG:
-                    self._reply(P.RESP_CATALOG, srv._catalog_body(body))
-                elif ftype == P.REQ_READV:
-                    rbody, payload = srv._readv(body)
-                    self._reply(P.RESP_READV, rbody, payload)
-                else:
-                    self._reply(P.RESP_ERROR,
-                                {"error": f"unexpected frame type {ftype}"})
+                with obs.trace.span("rbsp.serve", cat="server", verb=verb):
+                    if ftype == P.REQ_PING:
+                        self._reply(P.RESP_PING, {"ok": True})
+                    elif ftype == P.REQ_CATALOG:
+                        self._reply(P.RESP_CATALOG, srv._catalog_body(body))
+                    elif ftype == P.REQ_READV:
+                        rbody, payload = srv._readv(body)
+                        self._reply(P.RESP_READV, rbody, payload)
+                    elif ftype == P.REQ_STATS:
+                        self._reply(P.RESP_STATS, srv._stats_body(body))
+                    else:
+                        self._reply(P.RESP_ERROR,
+                                    {"error": f"unexpected frame type {ftype}"})
+                obs.counter("server.requests", verb=verb).inc()
+                obs.histogram("server.request_s", verb=verb).observe(
+                    time.perf_counter() - t0)
             except BrokenPipeError:
                 return
             except Exception as e:   # per-request fault isolation
-                _LOG.warning("request failed: %r", e)
+                obs.counter("server.errors", verb=verb).inc()
+                _LOG.warning("request failed (peer=%s seq=%d verb=%s): %r",
+                             peer, seq, verb, e)
                 try:
                     self._reply(P.RESP_ERROR, {"error": str(e)})
                 except OSError:
@@ -138,6 +154,8 @@ class BasketServer:
         self._stat_lock = threading.Lock()
         self.stats = {"requests": 0, "baskets_served": 0, "preads": 0,
                       "bytes_disk": 0, "bytes_wire": 0, "transcoded": 0}
+        self._stats_gen = 0           # bumps per STATS response (under lock)
+        self._t_start = time.time()
 
     # -- lifecycle -------------------------------------------------------
 
@@ -232,6 +250,27 @@ class BasketServer:
             "transcode": self.transcode,
         }
 
+    # -- observability ---------------------------------------------------
+
+    def _stats_body(self, body: dict) -> dict:
+        """The ``STATS`` response: generation-stamped snapshot of the
+        process-wide obs registry plus this server's stats dict.  The
+        generation is a per-server monotonic counter so a monitor can
+        tell two polls apart (and detect a restarted server by a reset).
+        ``"trace": true`` drains the span ring into the response — each
+        buffered event leaves the server exactly once."""
+        with self._stat_lock:
+            self._stats_gen += 1
+            gen = self._stats_gen
+            server_stats = dict(self.stats)
+        out = {"gen": gen, "pid": os.getpid(),
+               "uptime_s": time.time() - self._t_start,
+               "server": server_stats,
+               "metrics": obs.snapshot()}
+        if body.get("trace"):
+            out["trace_events"] = obs.trace.drain()
+        return out
+
     # -- vectored reads --------------------------------------------------
 
     def _readv(self, body: dict) -> tuple[dict, bytes]:
@@ -258,15 +297,25 @@ class BasketServer:
             ranges.append((int(b["offset"]), int(b["meta"]["comp_len"])))
             metas.append(dict(b["meta"]))
 
+        # per-branch access telemetry: the repacker's input signal.  One
+        # locked add per (path, branch) pair per request, not per basket.
+        per_branch: dict[str, int] = {}
+        for branch, _idx in wants:
+            per_branch[branch] = per_branch.get(branch, 0) + 1
+        for branch, n in per_branch.items():
+            obs.counter("server.reads", path=rel, branch=branch).inc(n)
+
         merged = P.coalesce(ranges, self.max_gap, self.max_span)
         payloads: list[Optional[bytes]] = [None] * len(wants)
         disk_bytes = 0
-        for off, ln, members in merged:
-            buf = fdcache.pread(abspath, off, ln, expect=cat.generation)
-            disk_bytes += ln
-            for i in members:
-                r_off, r_len = ranges[i]
-                payloads[i] = buf[r_off - off: r_off - off + r_len]
+        with obs.trace.span("server.pread", cat="server", path=rel,
+                            preads=len(merged)):
+            for off, ln, members in merged:
+                buf = fdcache.pread(abspath, off, ln, expect=cat.generation)
+                disk_bytes += ln
+                for i in members:
+                    r_off, r_len = ranges[i]
+                    payloads[i] = buf[r_off - off: r_off - off + r_len]
 
         n_trans = 0
         wire = body.get("wire")
@@ -294,5 +343,9 @@ class BasketServer:
             self.stats["bytes_disk"] += disk_bytes
             self.stats["bytes_wire"] += len(payload)
             self.stats["transcoded"] += n_trans
+        obs.counter("server.baskets_served").inc(len(wants))
+        obs.counter("server.bytes_disk").inc(disk_bytes)
+        obs.counter("server.bytes_wire").inc(len(payload))
+        obs.histogram("server.readv_baskets").observe(len(wants))
         return {"path": rel, "generation": list(cat.generation),
                 "baskets": resp_baskets}, payload

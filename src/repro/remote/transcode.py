@@ -37,8 +37,10 @@ The mechanism reuses the whole existing stack:
 from __future__ import annotations
 
 import math
+import time
 from typing import Iterable, Optional, Sequence
 
+from repro import obs
 from repro.core import basket as _basket
 from repro.core import codec as _codec
 from repro.tune.model import Objective, resolve_objective
@@ -160,7 +162,9 @@ def transcode_basket(payload, meta_json: dict,
     """
     cands = wire_candidates(meta_json, objective, accept, link_mbps)
     if not cands:
+        obs.counter("transcode.decisions", wire="pruned").inc()
         return payload, meta_json
+    t0 = time.perf_counter()
     obj = resolve_objective(objective)
     src = meta_json["algo"]
     orig_len = int(meta_json["orig_len"])
@@ -195,6 +199,9 @@ def transcode_basket(payload, meta_json: dict,
             wm.update(algo=algo, level=level, comp_len=len(wp),
                       has_dict=False)
             best = (s, wp, wm)
+    won = best[2]["algo"] if best[2] is not meta_json else "kept"
+    obs.counter("transcode.decisions", wire=won).inc()
+    obs.histogram("transcode.s", src=src).observe(time.perf_counter() - t0)
     return best[1], best[2]
 
 

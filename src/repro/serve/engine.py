@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 __all__ = ["ServeEngine", "sample_logits"]
 
 
@@ -67,6 +69,7 @@ class ServeEngine:
         rid = self._next_id
         self._next_id += 1
         self._queue.append((rid, np.asarray(tokens, np.int32), max_new))
+        obs.counter("serve.requests").inc()
         return rid
 
     def run(self) -> dict:
@@ -94,8 +97,10 @@ class ServeEngine:
         toks = np.zeros((self.B, plen), np.int32)
         for slot_i, (rid, t, max_new) in zip(free, take):
             toks[slot_i, plen - len(t):] = t
-        logits, cache = self._prefill(self.params,
-                                      {"tokens": jnp.asarray(toks)})
+        with obs.trace.span("serve.prefill", cat="serve", slots=len(take),
+                            plen=plen):
+            logits, cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(toks)})
         # write the prefilled rows into the engine cache
         rows = jnp.asarray(free[: len(take)], jnp.int32)
         self.cache = jax.tree.map(
@@ -124,9 +129,12 @@ class ServeEngine:
             last = np.zeros((self.B, 1), np.int32)
             for i in active:
                 last[i, 0] = self.slots[i].out[-1]
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(last),
-                jnp.asarray(pos, jnp.int32))
+            with obs.trace.span("serve.decode_step", cat="serve",
+                                slots=len(active)):
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(last),
+                    jnp.asarray(pos, jnp.int32))
+            obs.counter("serve.tokens").inc(len(active))
             self.key, sub = jax.random.split(self.key)
             nxt = np.asarray(sample_logits(logits, sub, self.temperature))
             for i in active:
@@ -141,3 +149,5 @@ class ServeEngine:
         s = self.slots[slot_i]
         self._done[s.req_id] = np.asarray(s.out, np.int32)
         s.active = False
+        obs.counter("serve.completed").inc()
+        obs.histogram("serve.gen_tokens").observe(len(s.out))

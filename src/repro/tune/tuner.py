@@ -36,6 +36,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.codec import CompressionConfig
 from repro.core.policy import PROFILES, choose, precond_for_array
 
@@ -279,6 +280,7 @@ class Tuner:
                 if dec.objective == self.objective.name \
                         and not self._stale(name, dec, arr):
                     self.stats["reused"] += 1
+                    obs.counter("tune.decisions", outcome="reused").inc()
                     return dec.config()
                 self.decisions.pop(name, None)
                 self._drift.pop(name, None)
@@ -287,6 +289,7 @@ class Tuner:
                 retune = False
             if arr.nbytes < self.min_tune_bytes:
                 self.stats["fallback"] += 1
+                obs.counter("tune.decisions", outcome="fallback").inc()
                 return choose(name, arr, self.fallback_profile)
         t0 = time.perf_counter()
         sample = self._sample(arr)
@@ -310,6 +313,7 @@ class Tuner:
                 if dec is not None and dec.objective == self.objective.name:
                     # another thread tuned this branch while we waited
                     self.stats["reused"] += 1
+                    obs.counter("tune.decisions", outcome="reused").inc()
                     return dec.config()
                 # a drift-triggered re-tune must NOT be satisfied from the
                 # signature cache: the fingerprint (order-0 entropy) can't
@@ -327,13 +331,17 @@ class Tuner:
                         self._drift.pop(name, None)
                         self.stats["shared"] += 1
                         self.stats["trial_s"] += time.perf_counter() - t0
+                        obs.counter("tune.decisions", outcome="shared").inc()
                         return dec.config()
             dec = self._tune(name, arr, sample, h, sig, t0)
             with self._lock:
                 if dec is None:     # every trial failed: static fallback
                     self.stats["fallback"] += 1
+                    obs.counter("tune.decisions", outcome="fallback").inc()
                     return choose(name, arr, self.fallback_profile)
-                self.stats["retuned" if retune else "tuned"] += 1
+                kind = "retuned" if retune else "tuned"
+                self.stats[kind] += 1
+                obs.counter("tune.decisions", outcome=kind).inc()
                 return dec.config()
 
     def observe(self, name: str, meta) -> None:
@@ -406,6 +414,7 @@ class Tuner:
                 continue
             trials[trials.index(t)] = TrialResult(t.algo, t.level,
                                                   t.precond, *r)
+        obs.histogram("tune.matrix_s").observe(time.perf_counter() - t0)
         with self._lock:
             self.stats["trials"] += len(cands)
             self.stats["trial_s"] += time.perf_counter() - t0

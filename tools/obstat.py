@@ -1,0 +1,18 @@
+#!/usr/bin/env python
+"""Observability CLI — thin wrapper over ``python -m repro.obs`` that
+works from a source checkout without PYTHONPATH gymnastics::
+
+    tools/obstat.py HOST:PORT                      # one-shot dump
+    tools/obstat.py HOST:PORT --watch --top 10     # hot branches + latency
+    tools/obstat.py HOST:PORT --trace out.json     # Chrome trace window
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
