@@ -1,0 +1,288 @@
+"""Chaos soak + hedging benchmark for the failure-hardened remote tier.
+
+Three stages (DESIGN.md §14):
+
+* **kinds** — each injectable fault kind (garble / drop / delay / reset /
+  short), one at a time through a seeded :class:`repro.fault.ChaosProxy`
+  with ``max_fires=1``, against a single client.  Deterministic: the
+  fault *must* fire and the read *must* still return the right bytes.
+
+* **soak** — the mixed run: two byte-identical replicas, replica A
+  behind a chaos proxy (probabilistic garble/drop/delay/reset) *and* on
+  rotting local storage (every pread garbled via the fdcache fault
+  hook), plus a dead endpoint in every client's pool.  N client threads
+  read every branch repeatedly.  Gates: **zero client-visible errors**
+  and **byte identity** against a fault-free local read — the torn-wire /
+  corrupt-disk noise must be fully absorbed by retry, failover, and
+  cross-replica quarantine.
+
+* **hedge** — replica A's proxy stalls half of its READV responses by
+  100 ms; clients hold endpoints [stalled-A, clean-B].  The same read
+  sequence runs with ``hedge=None`` and ``hedge=0.02``.  Gate: hedged
+  p99 < unhedged p99 — the hedge escapes the stall instead of waiting
+  it out.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import socket
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.bfile import write_arrays
+from repro.core.codec import CompressionConfig
+from repro.fault import ChaosProxy, FaultPlan, FaultRule, pread_fault_hook
+from repro.io import fdcache
+from repro.remote import BasketServer, EndpointPool, RemoteBasketFile
+
+from .common import emit
+
+MB = 1 << 20
+
+
+def _bench_dir():
+    for d in ("/dev/shm", None):
+        if d is None or (os.path.isdir(d) and os.access(d, os.W_OK)):
+            return tempfile.TemporaryDirectory(dir=d, prefix="fig_fault_")
+
+
+def _make_corpus(td: str, quick: bool) -> dict[str, np.ndarray]:
+    """Two byte-identical replica directories under ``td``.  ``algo=none``
+    keeps payloads raw so a garbled byte is exactly one checksum failure
+    (the corrupt-quarantine path), never a codec-dependent decode error."""
+    rows = 60_000 if quick else 400_000
+    rng = np.random.default_rng(5)
+    arrays = {
+        "energy": np.cumsum(rng.integers(1, 9, rows)).astype(np.int64),
+        "pid": rng.integers(0, 100, rows).astype(np.int32),
+    }
+    os.makedirs(os.path.join(td, "ra"))
+    os.makedirs(os.path.join(td, "rb"))
+    write_arrays(os.path.join(td, "ra", "soak.bskt"), arrays,
+                 cfg_for=lambda n, a: CompressionConfig("none", 0),
+                 target_basket_bytes=32 * 1024)
+    shutil.copyfile(os.path.join(td, "ra", "soak.bskt"),
+                    os.path.join(td, "rb", "soak.bskt"))
+    return arrays
+
+
+def _row(stage, case, value, unit, wall=""):
+    return {"bench": "fig_fault", "stage": stage, "case": case,
+            "wall_s": wall, "value": value, "unit": unit}
+
+
+def _kind_rows(srv, arrays, quick: bool) -> list[dict]:
+    """One deterministic firing per fault kind, read still correct."""
+    rows = []
+    for kind in ("garble", "drop", "delay", "reset", "short"):
+        plan = FaultPlan([FaultRule(kind, direction="c2s" if kind == "reset"
+                                    else "s2c", verb="readv", max_fires=1,
+                                    delay_s=0.1)], seed=11)
+        with ChaosProxy(srv.host, srv.port, plan) as px:
+            t0 = time.perf_counter()
+            with RemoteBasketFile(host=px.host, port=px.port,
+                                  path="soak.bskt", wire=None,
+                                  timeout=1.0, retries=4,
+                                  backoff=0.01) as rf:
+                got = rf.read_branch("energy")
+            dt = time.perf_counter() - t0
+        ok = bool((got == arrays["energy"]).all())
+        fired = plan.counts().get(kind, 0)
+        rows.append(_row("kinds", f"{kind}.fired", fired, "faults",
+                         round(dt, 3)))
+        rows.append(_row("kinds", f"{kind}.bytes",
+                         "ok" if ok else "MISMATCH", ""))
+    return rows
+
+
+def _soak_rows(td, srv_a, srv_b, arrays, quick: bool) -> list[dict]:
+    threads_n = 4 if quick else 8
+    reps = 6 if quick else 10
+    plan = FaultPlan([
+        FaultRule("garble", p=0.25, direction="s2c", verb="readv"),
+        FaultRule("drop", p=0.08, direction="s2c", verb="readv"),
+        FaultRule("delay", p=0.35, delay_s=0.03, direction="s2c",
+                  verb="readv"),
+        FaultRule("reset", p=0.15, direction="c2s", verb="readv"),
+    ], seed=23)
+    # a dead-but-fast endpoint: bound then closed, connects are refused
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    dead = s.getsockname()[1]
+    s.close()
+    errors: list = []
+    mismatches: list = []
+
+    def worker(wid: int, px):
+        try:
+            # short cooldown: the default 2s bench would park the chaotic
+            # replica for most of this soak after its first failure.  One
+            # client session per rep — connections are sticky, so a
+            # long-lived client settles on the clean replica after its
+            # first failover and the chaos stops being exercised.
+            pool = EndpointPool([("127.0.0.1", dead),
+                                 (px.host, px.port),
+                                 (srv_b.host, srv_b.port)], cooldown=0.1)
+            for _ in range(reps):
+                with RemoteBasketFile(
+                        path="soak.bskt", endpoints=pool,
+                        wire=None, timeout=1.0, retries=8, backoff=0.02,
+                        busy_retries=20) as rf:
+                    for name, want in arrays.items():
+                        got = rf.read_branch(name)
+                        if not (got == want).all():
+                            mismatches.append((wid, name))
+        except Exception as e:
+            errors.append((wid, repr(e)))
+
+    # replica A: chaotic wire AND rotting disk.  Rot every 3rd pread (not
+    # all of them): a fully-rotten A would push every client to B after
+    # one quarantine round and the wire faults would never fire.
+    hook = pread_fault_hook(match=os.path.join(td, "ra"), kind="garble",
+                            every=3)
+    prev_hook = fdcache.set_fault_hook(hook)
+    t0 = time.perf_counter()
+    try:
+        with ChaosProxy(srv_a.host, srv_a.port, plan) as px:
+            ts = [threading.Thread(target=worker, args=(i, px))
+                  for i in range(threads_n)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(timeout=300)
+    finally:
+        fdcache.set_fault_hook(prev_hook)
+    wall = time.perf_counter() - t0
+    counts = plan.counts()
+    rows = [_row("soak", "clients", threads_n, "threads", round(wall, 3)),
+            _row("soak", "reads",
+                 threads_n * reps * len(arrays), "branch reads"),
+            _row("soak", "errors", len(errors), "errors"),
+            _row("soak", "mismatches", len(mismatches), "reads")]
+    for kind in ("garble", "drop", "delay", "reset"):
+        rows.append(_row("soak", f"injected.{kind}",
+                         counts.get(kind, 0), "faults"))
+    rows.append(_row("soak", "injected.diskrot", hook.fired, "preads"))
+    for wid, err in errors[:3]:
+        print(f"soak error (worker {wid}): {err}", file=sys.stderr)
+    return rows
+
+
+def _hedge_rows(srv_a, srv_b, arrays, quick: bool) -> list[dict]:
+    reads = 12 if quick else 40
+    rows = []
+    p99s = {}
+    for case, hedge in [("unhedged", None), ("hedged", 0.02)]:
+        # a fresh proxy + same-seed plan per case: both arms see the same
+        # stall pattern (100ms on half the READV responses)
+        plan = FaultPlan([FaultRule("delay", p=0.5, delay_s=0.1,
+                                    direction="s2c", verb="readv")],
+                         seed=31)
+        with ChaosProxy(srv_a.host, srv_a.port, plan) as px:
+            lat = []
+            with RemoteBasketFile(
+                    path="soak.bskt",
+                    endpoints=[(px.host, px.port),
+                               (srv_b.host, srv_b.port)],
+                    wire=None, timeout=5.0, retries=4, backoff=0.01,
+                    hedge=hedge) as rf:
+                for _ in range(reads):
+                    t0 = time.perf_counter()
+                    got = rf.read_branch("pid")
+                    lat.append(time.perf_counter() - t0)
+                    assert (got == arrays["pid"]).all()
+        lat.sort()
+        p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+        p99s[case] = p99
+        rows.append(_row("hedge", f"{case}.p50",
+                         round(lat[len(lat) // 2] * 1e3, 2), "ms"))
+        rows.append(_row("hedge", f"{case}.p99",
+                         round(p99 * 1e3, 2), "ms"))
+        rows.append(_row("hedge", f"{case}.stalls",
+                         plan.counts().get("delay", 0), "faults"))
+    rows.append(_row("hedge", "speedup.p99",
+                     round(p99s["unhedged"] / max(p99s["hedged"], 1e-9), 2),
+                     "x"))
+    return rows
+
+
+def run(out_csv: str | None = None, quick: bool = False) -> list[dict]:
+    with _bench_dir() as td:
+        arrays = _make_corpus(td, quick)
+        with BasketServer(os.path.join(td, "ra"), workers=0) as srv_a, \
+                BasketServer(os.path.join(td, "rb"), workers=0) as srv_b:
+            srv_a.start(), srv_b.start()
+            rows = _kind_rows(srv_a, arrays, quick)
+            rows += _soak_rows(td, srv_a, srv_b, arrays, quick)
+            rows += _hedge_rows(srv_a, srv_b, arrays, quick)
+    emit(rows, out_csv)
+    return rows
+
+
+def check(rows: list[dict]) -> int:
+    """CI chaos gate (see module docstring)."""
+    ok = True
+
+    def fail(msg):
+        nonlocal ok
+        print(f"FAIL: {msg}", file=sys.stderr)
+        ok = False
+
+    by = {(r["stage"], r["case"]): r for r in rows}
+    for kind in ("garble", "drop", "delay", "reset", "short"):
+        f = by.get(("kinds", f"{kind}.fired"))
+        if f is None or int(f["value"]) < 1:
+            fail(f"fault kind {kind!r} never fired")
+        b = by.get(("kinds", f"{kind}.bytes"))
+        if b is None or b["value"] != "ok":
+            fail(f"bytes wrong after injected {kind!r}")
+    errs = by.get(("soak", "errors"))
+    if errs is None or int(errs["value"]) != 0:
+        fail(f"soak had client-visible errors: "
+             f"{errs['value'] if errs else 'missing row'}")
+    mm = by.get(("soak", "mismatches"))
+    if mm is None or int(mm["value"]) != 0:
+        fail("soak returned wrong bytes")
+    wire = sum(int(by[k]["value"]) for k in by
+               if k[0] == "soak" and k[1].startswith("injected.")
+               and k[1] != "injected.diskrot")
+    if wire < 3:
+        fail(f"soak injected only {wire} wire faults — proves nothing")
+    rot = by.get(("soak", "injected.diskrot"))
+    if rot is None or int(rot["value"]) < 1:
+        fail("soak never exercised the corrupt-basket quarantine path")
+    hu = by.get(("hedge", "unhedged.p99"))
+    hh = by.get(("hedge", "hedged.p99"))
+    if hu is None or hh is None:
+        fail("missing hedge quantiles")
+    elif not float(hh["value"]) < float(hu["value"]):
+        fail(f"hedged p99 {hh['value']}ms not better than "
+             f"unhedged {hu['value']}ms")
+    if ok:
+        print("fig_fault check: all gates passed")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpus, fewer clients/reps")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the chaos soak absorbed "
+                         "every injected fault (zero errors, byte "
+                         "identity) and hedging beat the stalls (CI gate)")
+    ap.add_argument("--out", default="artifacts/bench/fig_fault.csv")
+    args = ap.parse_args(argv)
+    rows = run(args.out, quick=args.quick)
+    return check(rows) if args.check else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

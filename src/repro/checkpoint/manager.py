@@ -47,7 +47,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.basket import basket_rows, split_array
-from repro.core.bfile import BasketFile, BasketWriter
+from repro.core.bfile import BasketFile, BasketWriter, _fsync_dir
 from repro.core.policy import choose
 
 __all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
@@ -408,10 +408,24 @@ class CheckpointManager:
                                     tuner=self._tuner)
                 manifest = {"step": step, "time": time.time(),
                             "wall_s": time.monotonic() - t0, **stats}
+                # atomic commit: tmp + fsync + rename + fsync dir — the
+                # manifest is the "this step exists" marker, so it must
+                # never be observable half-written (or survive a crash
+                # pointing at a container the kernel never flushed)
                 tmp = self._manifest_path(step) + ".tmp"
-                with open(tmp, "w") as fh:
-                    json.dump(manifest, fh)
-                os.replace(tmp, self._manifest_path(step))
+                try:
+                    with open(tmp, "w") as fh:
+                        json.dump(manifest, fh)
+                        fh.flush()
+                        os.fsync(fh.fileno())
+                    os.replace(tmp, self._manifest_path(step))
+                except BaseException:
+                    try:
+                        os.remove(tmp)
+                    except OSError:
+                        pass
+                    raise
+                _fsync_dir(self.dir)
                 self._last_stats = manifest
                 self._gc()
             except BaseException as e:   # surfaced by the next save()/wait()

@@ -27,8 +27,18 @@ import numpy as np
 from . import codec as _codec
 from .checksum import adler32_hw
 
-__all__ = ["BasketMeta", "pack_basket", "unpack_basket", "unpack_basket_into",
+__all__ = ["BasketMeta", "ChecksumError",
+           "pack_basket", "unpack_basket", "unpack_basket_into",
            "split_array", "join_baskets", "byte_offsets"]
+
+
+class ChecksumError(ValueError):
+    """Decoded basket bytes fail their stored adler32 — corrupt payload.
+
+    A distinct type (not a plain ValueError) so the robustness layer can
+    tell *content corruption* apart from caller mistakes: a remote reader
+    re-fetches the basket from another replica, a local reader raises a
+    structured ``CorruptBasketError`` naming branch/index/offset."""
 
 
 def byte_offsets(lens) -> tuple[list[int], int]:
@@ -118,7 +128,7 @@ def unpack_basket(payload: bytes, meta: BasketMeta,
     if len(raw) != meta.orig_len:
         raise ValueError(f"basket decoded {len(raw)} bytes, expected {meta.orig_len}")
     if verify and adler32_hw(raw) != meta.checksum:
-        raise ValueError("basket checksum mismatch (corrupt data)")
+        raise ChecksumError("basket checksum mismatch (corrupt data)")
     return raw
 
 
@@ -143,7 +153,7 @@ def unpack_basket_into(payload, meta: BasketMeta, out,
     if n != meta.orig_len:
         raise ValueError(f"basket decoded {n} bytes, expected {meta.orig_len}")
     if verify and adler32_hw(dst) != meta.checksum:
-        raise ValueError("basket checksum mismatch (corrupt data)")
+        raise ChecksumError("basket checksum mismatch (corrupt data)")
     return n
 
 

@@ -29,8 +29,8 @@ from typing import Optional
 
 import numpy as np
 
-from .basket import (BasketMeta, byte_offsets, join_baskets, split_array,
-                     unpack_basket, unpack_basket_into)
+from .basket import (BasketMeta, ChecksumError, byte_offsets, join_baskets,
+                     split_array, unpack_basket, unpack_basket_into)
 from .codec import CompressionConfig
 
 
@@ -39,9 +39,72 @@ def _pread(path: str, offset: int, n: int, expect=None) -> bytes:
     from repro.io import fdcache
     return fdcache.pread(path, offset, n, expect=expect)
 
-__all__ = ["BasketWriter", "BasketFile", "write_arrays", "read_arrays"]
+__all__ = ["BasketWriter", "BasketFile", "write_arrays", "read_arrays",
+           "CorruptBasketError", "TruncatedContainerError",
+           "recover_container"]
 
 _MAGIC = b"RBKTv001"
+_JOURNAL_MAGIC = "RBKJ1"
+
+
+class CorruptBasketError(ChecksumError):
+    """A basket's decoded bytes fail their stored adler32 — structured:
+    names the container, branch, basket index, and byte offset so the
+    operator (or a repair tool) can locate the damage without a hexdump."""
+
+    def __init__(self, path: str, branch: str, index: int, offset: int,
+                 cause=None):
+        super().__init__(
+            f"corrupt basket in {path}: branch={branch!r} index={index} "
+            f"offset={offset}" + (f" ({cause})" if cause else ""))
+        self.path = str(path)
+        self.branch = str(branch)
+        self.index = int(index)
+        self.offset = int(offset)
+
+
+class TruncatedContainerError(ValueError):
+    """The container is torn or truncated (crash mid-copy, partial
+    download, disk-full tail loss): header present but the TOC trailer is
+    missing or inconsistent.  :func:`recover_container` can salvage every
+    basket that precedes the tear when a write journal is present."""
+
+    def __init__(self, path: str, msg: str):
+        super().__init__(f"{path}: {msg}")
+        self.path = str(path)
+
+
+def _fsync_dir(dirname: str) -> None:
+    """fsync the directory so a rename survives a power cut — the commit
+    is not durable until the directory entry itself is on disk."""
+    try:
+        dfd = os.open(dirname or ".", os.O_RDONLY)
+    except OSError:
+        return                       # not fsyncable here (e.g. some FSes)
+    try:
+        os.fsync(dfd)
+    except OSError:
+        pass
+    finally:
+        os.close(dfd)
+
+
+def _journal_path(path: str) -> str:
+    """The write journal that describes ``path``'s bytes.  A leftover
+    ``*.tmp`` from a crashed writer shares its final path's journal (the
+    tmp is byte-for-byte the committed prefix)."""
+    path = str(path)
+    if path.endswith(".tmp"):
+        path = path[:-4]
+    return path + ".journal"
+
+
+def _count_corrupt() -> None:
+    try:
+        from repro import obs
+        obs.counter("bfile.corrupt_baskets").inc()
+    except Exception:
+        pass
 
 
 class BasketWriter:
@@ -51,10 +114,20 @@ class BasketWriter:
     I/O engine (repro.io.engine): baskets compress concurrently on a
     bounded pool while this thread commits payloads in offset order —
     output is byte-identical to the serial path.
+
+    Crash safety: baskets stream to ``path + ".tmp"``; :meth:`close`
+    writes the TOC, fsyncs, atomically renames onto ``path``, then fsyncs
+    the directory — readers see the old generation, the new generation,
+    or (for a torn external copy) a :class:`TruncatedContainerError`,
+    never silently wrong bytes.  ``journal=True`` additionally appends a
+    ``path + ".journal"`` sidecar (one JSON line per branch and basket,
+    flushed as written); :func:`recover_container` uses it to salvage
+    every basket preceding a tear.  The container bytes are identical
+    either way — the journal is a sidecar, never part of the format.
     """
 
     def __init__(self, path: str, workers: int = 0, engine=None,
-                 tuner=None, objective=None):
+                 tuner=None, objective=None, journal: bool = False):
         self.path = str(path)
         self._tmp = self.path + ".tmp"
         os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
@@ -62,6 +135,22 @@ class BasketWriter:
         self._f.write(_MAGIC)
         self._branches: dict[str, dict] = {}
         self._closed = False
+        self._failed = None          # first exception seen mid-write
+        self._journal = None
+        self._jpath = _journal_path(self.path)
+        if journal:
+            self._journal = open(self._jpath, "w")
+            self._journal.write(json.dumps(
+                {"magic": _JOURNAL_MAGIC,
+                 "container": os.path.basename(self.path)}) + "\n")
+            self._journal.flush()
+        else:
+            # a stale journal from an earlier journalled generation must
+            # not describe this write's bytes
+            try:
+                os.remove(self._jpath)
+            except OSError:
+                pass
         self._engine = engine
         self._owns_engine = False
         if engine is None and workers:
@@ -114,21 +203,26 @@ class BasketWriter:
         if engine is None:
             from repro.io.engine import CompressionEngine
             engine = CompressionEngine(0)   # the serial path — no pools
-        packed = engine.pack_stream(chunks, cfg)
-        baskets = []
-        for _start, _count, payload, meta in packed:
-            off = self._f.tell()
-            self._f.write(payload)   # accepts memoryview payloads zero-copy
-            if self._tuner is not None:
-                self._tuner.observe(name, meta)     # drift-detector feed
-            baskets.append({"offset": off, "meta": meta.to_json()})
         entry = {
             "dtype": np.dtype(dtype).str,
             "shape": list(shape),
             "config": {"algo": cfg.algo, "level": cfg.level, "precond": cfg.precond},
             "dictionary": base64.b64encode(cfg.dictionary).decode() if cfg.dictionary else None,
-            "baskets": baskets,
+            "baskets": [],
         }
+        self._journal_branch(name, entry)
+        try:
+            packed = engine.pack_stream(chunks, cfg)
+            for _start, _count, payload, meta in packed:
+                off = self._f.tell()
+                self._f.write(payload)  # accepts memoryview payloads zero-copy
+                if self._tuner is not None:
+                    self._tuner.observe(name, meta)     # drift-detector feed
+                entry["baskets"].append({"offset": off, "meta": meta.to_json()})
+                self._journal_basket(name, off, meta.to_json())
+        except BaseException as e:
+            self._failed = self._failed or e
+            raise
         self._branches[name] = entry
         return entry
 
@@ -138,15 +232,38 @@ class BasketWriter:
         branch — the BufferMerger/fast-merge path (no recompression)."""
         if name in self._branches:
             raise ValueError(f"branch {name!r} already written")
-        out = []
-        for payload, meta_json in baskets:
-            off = self._f.tell()
-            self._f.write(payload)
-            out.append({"offset": off, "meta": dict(meta_json)})
         entry = {"dtype": dtype, "shape": list(shape), "config": dict(config),
-                 "dictionary": dictionary, "baskets": out}
+                 "dictionary": dictionary, "baskets": []}
+        self._journal_branch(name, entry)
+        try:
+            for payload, meta_json in baskets:
+                off = self._f.tell()
+                self._f.write(payload)
+                entry["baskets"].append({"offset": off, "meta": dict(meta_json)})
+                self._journal_basket(name, off, dict(meta_json))
+        except BaseException as e:
+            self._failed = self._failed or e
+            raise
         self._branches[name] = entry
         return entry
+
+    # -- write journal (recovery sidecar) --------------------------------
+
+    def _journal_branch(self, name: str, entry: dict) -> None:
+        if self._journal is None:
+            return
+        self._journal.write(json.dumps(
+            {"branch": name, "dtype": entry["dtype"],
+             "shape": entry["shape"], "config": entry["config"],
+             "dictionary": entry["dictionary"]}) + "\n")
+        self._journal.flush()
+
+    def _journal_basket(self, name: str, offset: int, meta_json: dict) -> None:
+        if self._journal is None:
+            return
+        self._journal.write(json.dumps(
+            {"basket": name, "offset": offset, "meta": meta_json}) + "\n")
+        self._journal.flush()
 
     def write_blob(self, name: str, raw: bytes, cfg: Optional[CompressionConfig] = None) -> None:
         """Opaque byte branch (metadata blobs, tokenizer state, ...)."""
@@ -155,6 +272,16 @@ class BasketWriter:
     def close(self) -> None:
         if self._closed:
             return
+        if self._failed is not None:
+            # a basket write already failed: committing would publish a
+            # container whose TOC describes bytes that were never written.
+            # Abort instead and surface the original failure; subsequent
+            # close() calls are no-ops (idempotent after failure).
+            err = self._failed
+            self.abort()
+            raise RuntimeError(
+                f"container write to {self.path!r} failed mid-stream; "
+                f"aborted without committing: {err!r}") from err
         doc = {"branches": self._branches}
         if self._tuner is not None:
             # persist this file's tuning decisions in the header so appends
@@ -164,23 +291,47 @@ class BasketWriter:
             tuned = self._tuner.decisions_json(names=self._branches)
             if tuned:
                 doc["tuning"] = tuned
-        toc = json.dumps(doc).encode()
-        self._f.write(toc)
-        self._f.write(len(toc).to_bytes(8, "little"))
-        self._f.write(_MAGIC)
-        self._f.flush()
-        os.fsync(self._f.fileno())
-        self._f.close()
-        os.replace(self._tmp, self.path)  # atomic commit
+        try:
+            toc = json.dumps(doc).encode()
+            self._f.write(toc)
+            self._f.write(len(toc).to_bytes(8, "little"))
+            self._f.write(_MAGIC)
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._f.close()
+            os.replace(self._tmp, self.path)  # atomic commit
+        except BaseException:
+            # commit failed (ENOSPC on the TOC, rename error, ...): never
+            # leave the half-written tmp behind
+            self.abort()
+            raise
+        # the rename is durable only once the directory entry is synced
+        _fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+        if self._journal is not None:
+            # the journal now describes the committed bytes: keep it as
+            # the recovery sidecar for torn copies of this container
+            self._journal.flush()
+            self._journal.close()
+            self._journal = None
         self._closed = True
         if self._owns_engine:
             self._engine.close()
 
     def abort(self) -> None:
         if not self._closed:
-            self._f.close()
+            try:
+                self._f.close()
+            except OSError:
+                pass
             if os.path.exists(self._tmp):
                 os.remove(self._tmp)
+            if self._journal is not None:
+                try:
+                    self._journal.close()
+                    os.remove(self._jpath)
+                except OSError:
+                    pass
+                self._journal = None
             self._closed = True
             if self._owns_engine:
                 self._engine.close()
@@ -222,15 +373,33 @@ class BasketFile:
             # of a file this TOC does not describe
             st = os.fstat(f.fileno())
             self.generation = (st.st_dev, st.st_ino)
+            size = st.st_size
             head = f.read(8)
             if head != _MAGIC:
+                if _MAGIC.startswith(head):
+                    # a real container sheared off inside the header
+                    raise TruncatedContainerError(
+                        path, f"truncated container ({size} bytes)")
                 raise ValueError(f"{path}: not a BasketFile (bad magic)")
+            if size < 8 + 16:
+                raise TruncatedContainerError(
+                    path, f"truncated container ({size} bytes) — "
+                          "incomplete write?")
             f.seek(-16, os.SEEK_END)
             toc_len = int.from_bytes(f.read(8), "little")
             if f.read(8) != _MAGIC:
-                raise ValueError(f"{path}: truncated (bad trailer) — incomplete write?")
+                raise TruncatedContainerError(
+                    path, "truncated (bad trailer) — incomplete write?")
+            if not 2 <= toc_len <= size - 24:
+                raise TruncatedContainerError(
+                    path, f"TOC length {toc_len} inconsistent with "
+                          f"file size {size}")
             f.seek(-16 - toc_len, os.SEEK_END)
-            self._toc = json.loads(f.read(toc_len))
+            try:
+                self._toc = json.loads(f.read(toc_len))
+            except ValueError as e:
+                raise TruncatedContainerError(
+                    path, f"undecodable TOC — torn write? ({e})") from None
         self.branches = self._toc["branches"]
         # per-branch autotuner decisions persisted at write time (may be
         # absent: files predating repro.tune, or written without a tuner)
@@ -263,7 +432,11 @@ class BasketFile:
         meta = BasketMeta.from_json(b["meta"])
         payload = _pread(self.path, b["offset"], meta.comp_len,
                          expect=self.generation)
-        return unpack_basket(payload, meta, self._dictionary(entry), verify=self.verify)
+        try:
+            return unpack_basket(payload, meta, self._dictionary(entry),
+                                 verify=self.verify)
+        except ChecksumError as e:
+            raise self._quarantine(name, i, b, e) from e
 
     def read_basket_into(self, name: str, i: int, out) -> int:
         """Read + decode basket ``i`` directly into ``out`` (writable
@@ -273,8 +446,20 @@ class BasketFile:
         meta = BasketMeta.from_json(b["meta"])
         payload = _pread(self.path, b["offset"], meta.comp_len,
                          expect=self.generation)
-        return unpack_basket_into(payload, meta, out, self._dictionary(entry),
-                                  verify=self.verify)
+        try:
+            return unpack_basket_into(payload, meta, out,
+                                      self._dictionary(entry),
+                                      verify=self.verify)
+        except ChecksumError as e:
+            raise self._quarantine(name, i, b, e) from e
+
+    def _quarantine(self, name: str, i: int, b: dict,
+                    cause) -> CorruptBasketError:
+        """Turn a checksum failure into the structured error (counted in
+        ``bfile.corrupt_baskets``) naming exactly what is damaged."""
+        _count_corrupt()
+        return CorruptBasketError(self.path, name, i, int(b["offset"]),
+                                  cause=cause)
 
     def _reader(self, name: str):
         """Cached PrefetchReader per branch (engine shared across them);
@@ -388,6 +573,159 @@ class BasketFile:
 
     def __exit__(self, *a):
         self.close()
+
+    @staticmethod
+    def recover(path: str, out_path: Optional[str] = None) -> dict:
+        """Salvage a torn container — see :func:`recover_container`."""
+        return recover_container(path, out_path)
+
+
+# ---------------------------------------------------------------------------
+# crash recovery
+# ---------------------------------------------------------------------------
+
+def recover_container(path: str, out_path: Optional[str] = None) -> dict:
+    """Salvage every intact basket preceding the tear of a torn container.
+
+    ``path`` is a truncated/torn container (or a leftover ``*.tmp`` from a
+    crashed writer).  Recovery needs the write journal sidecar
+    (``BasketWriter(journal=True)``); without one the basket boundaries
+    live only in the (lost) TOC and a structured
+    :class:`TruncatedContainerError` says so.  Every candidate basket is
+    decoded and checked against its stored adler32 before it is kept —
+    a stale or mismatched journal can drop baskets but never resurrect
+    wrong bytes.  A branch is cut at its first missing/corrupt basket so
+    salvaged entry ranges stay contiguous from row 0.
+
+    Writes a fresh, valid container to ``out_path`` (default
+    ``path + ".recovered"``, committed atomically) and returns a report::
+
+        {"out_path", "baskets_kept", "baskets_lost",
+         "branches": {name: rows_kept}}
+    """
+    path = str(path)
+    out_path = str(out_path) if out_path else path + ".recovered"
+    jpath = _journal_path(path)
+    try:
+        size = os.path.getsize(path)
+    except OSError as e:
+        raise TruncatedContainerError(path, f"unreadable: {e}") from None
+    with open(path, "rb") as f:
+        head = f.read(8)
+    if head != _MAGIC:
+        if _MAGIC.startswith(head):
+            raise TruncatedContainerError(
+                path, "sheared inside the header — nothing to salvage")
+        raise ValueError(f"{path}: not a BasketFile (bad magic)")
+    if not os.path.exists(jpath):
+        raise TruncatedContainerError(
+            path, "cannot recover: no write journal sidecar "
+                  f"({jpath} missing) — basket boundaries were lost with "
+                  "the TOC; write with BasketWriter(journal=True) to make "
+                  "containers salvageable")
+
+    # parse the journal: branch descriptors + basket records, in order
+    order: list[str] = []
+    jbranches: dict[str, dict] = {}
+    with open(jpath) as jf:
+        first = jf.readline()
+        try:
+            if json.loads(first).get("magic") != _JOURNAL_MAGIC:
+                raise ValueError("bad journal magic")
+        except ValueError as e:
+            raise TruncatedContainerError(
+                path, f"unusable write journal {jpath}: {e}") from None
+        for line in jf:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                break                # journal itself torn: keep what parsed
+            if "branch" in rec:
+                order.append(rec["branch"])
+                jbranches[rec["branch"]] = {
+                    "dtype": rec["dtype"], "shape": rec["shape"],
+                    "config": rec["config"],
+                    "dictionary": rec["dictionary"], "baskets": []}
+            elif "basket" in rec and rec["basket"] in jbranches:
+                jbranches[rec["basket"]]["baskets"].append(
+                    {"offset": int(rec["offset"]), "meta": rec["meta"]})
+
+    kept = lost = 0
+    out_branches: dict[str, dict] = {}
+    rows_kept: dict[str, int] = {}
+    tmp = out_path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    src = open(path, "rb")
+    try:
+        with open(tmp, "wb") as dst:
+            dst.write(_MAGIC)
+            for name in order:
+                e = jbranches[name]
+                dictionary = base64.b64decode(e["dictionary"]) \
+                    if e["dictionary"] else None
+                out_baskets = []
+                rows = 0
+                for b in e["baskets"]:
+                    meta = BasketMeta.from_json(b["meta"])
+                    end = b["offset"] + meta.comp_len
+                    if end > size:
+                        break       # the tear: nothing later is complete
+                    src.seek(b["offset"])
+                    payload = src.read(meta.comp_len)
+                    try:
+                        unpack_basket(payload, meta, dictionary, verify=True)
+                    except (ChecksumError, ValueError, KeyError):
+                        break       # cut the branch at the first bad basket
+                    off = dst.tell()
+                    dst.write(payload)
+                    out_baskets.append({"offset": off, "meta": b["meta"]})
+                    rows += int(meta.entry_count)
+                    kept += 1
+                lost += len(e["baskets"]) - len(out_baskets)
+                if not out_baskets:
+                    continue
+                shape = list(e["shape"])
+                if len(out_baskets) < len(e["baskets"]):
+                    if not shape:
+                        continue     # 0-d branch lost its only basket tail
+                    # trim the leading dimension to the salvaged rows and
+                    # require exact byte agreement — a partial basket can
+                    # never smuggle a misaligned row count through
+                    row_elems = 1
+                    for d in shape[1:]:
+                        row_elems *= int(d)
+                    row_bytes = np.dtype(e["dtype"]).itemsize * row_elems
+                    total = sum(b["meta"]["orig_len"] for b in out_baskets)
+                    if row_bytes <= 0 or total % row_bytes:
+                        continue
+                    shape[0] = total // row_bytes
+                    rows = shape[0]
+                out_branches[name] = {
+                    "dtype": e["dtype"], "shape": shape,
+                    "config": e["config"], "dictionary": e["dictionary"],
+                    "baskets": out_baskets}
+                rows_kept[name] = rows
+            toc = json.dumps({"branches": out_branches}).encode()
+            dst.write(toc)
+            dst.write(len(toc).to_bytes(8, "little"))
+            dst.write(_MAGIC)
+            dst.flush()
+            os.fsync(dst.fileno())
+        os.replace(tmp, out_path)
+        _fsync_dir(os.path.dirname(os.path.abspath(out_path)))
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
+    finally:
+        src.close()
+    return {"out_path": out_path, "baskets_kept": kept,
+            "baskets_lost": lost, "branches": rows_kept}
 
 
 # ---------------------------------------------------------------------------

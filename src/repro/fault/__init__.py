@@ -1,0 +1,27 @@
+"""repro.fault — deterministic fault injection (DESIGN.md §14).
+
+The failure-hardening in ``repro.remote`` and ``repro.core.bfile`` is only
+as real as the failures it has been run against.  This package supplies
+those failures *reproducibly*:
+
+* :class:`FaultPlan` / :class:`FaultRule` — a seeded description of what
+  to break, when: drop/delay/reset/garble/short-read, triggered per verb,
+  per direction, per frame count, or per byte offset.  Decisions are pure
+  functions of ``(seed, rule, connection, frame)`` — the same plan
+  replays the same faults, so a chaos-soak failure is a test case, not a
+  weather report.
+* :class:`ChaosProxy` — an in-process TCP proxy speaking raw RBSP framing
+  that applies a plan between a real client and a real server.
+* :func:`pread_fault_hook` — the local-storage analogue: a hook for
+  ``repro.io.fdcache.set_fault_hook`` that garbles, truncates, or delays
+  basket preads underneath a live server or local reader.
+
+``tools/chaos.py`` is the CLI: stand a chaos proxy in front of any
+running basket server and point clients at it.
+"""
+
+from .inject import FaultPlan, FaultRule, parse_rule, pread_fault_hook
+from .proxy import ChaosProxy
+
+__all__ = ["FaultPlan", "FaultRule", "parse_rule", "pread_fault_hook",
+           "ChaosProxy"]

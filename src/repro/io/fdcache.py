@@ -30,7 +30,8 @@ import os
 import threading
 from collections import OrderedDict
 
-__all__ = ["pread", "generation", "invalidate", "clear", "StaleFileError"]
+__all__ = ["pread", "generation", "invalidate", "clear", "StaleFileError",
+           "set_fault_hook"]
 
 
 class StaleFileError(OSError):
@@ -45,6 +46,22 @@ class StaleFileError(OSError):
 _MAX_FDS = 64
 
 _lock = threading.Lock()
+
+# fault-injection hook (repro.fault): when set, every pread's bytes pass
+# through ``hook(path, offset, buf) -> bytes`` before the length check —
+# returning short bytes simulates a torn read, mutated bytes simulate
+# on-disk corruption, and a sleep inside simulates a slow device.  Test
+# and chaos-soak machinery only; None (the default) costs one attribute
+# load on the hot path.
+_fault_hook = None
+
+
+def set_fault_hook(hook):
+    """Install ``hook(path, offset, buf) -> bytes`` on the pread path
+    (None to remove).  Returns the previous hook so tests can restore."""
+    global _fault_hook
+    prev, _fault_hook = _fault_hook, hook
+    return prev
 
 
 class _Entry:
@@ -125,6 +142,8 @@ def pread(path: str, offset: int, n: int, expect: tuple | None = None) -> bytes:
         buf = os.pread(e.fd, n, offset)
     finally:
         _checkin(e)
+    if _fault_hook is not None:
+        buf = _fault_hook(path, offset, buf)
     if len(buf) != n:
         raise EOFError(f"{path}: short read at {offset}: {len(buf)} < {n}")
     return buf

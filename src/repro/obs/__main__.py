@@ -78,6 +78,24 @@ def hot_branches(counters: dict, prev: dict, top: int) -> list[tuple]:
     return rows[:top]
 
 
+def fault_rows(counters: dict, prev: dict) -> list[tuple[str, int, int]]:
+    """The robustness counters (DESIGN.md §14) as ``(label, delta, total)``
+    rows — retries by reason, hedges by outcome, server sheds and idle
+    reaps, corrupt-basket quarantines.  Zero-total rows are omitted; a
+    healthy system shows nothing here."""
+    want = ("remote.retries", "remote.hedge", "server.shed",
+            "server.idle_closed", "bfile.corrupt_baskets")
+    rows = []
+    for key, total in counters.items():
+        name, labels = metrics.parse_key(key)
+        if name not in want:
+            continue
+        label = name + "".join(f"[{v}]" for _k, v in sorted(labels.items()))
+        rows.append((label, int(total) - int(prev.get(key, 0)), int(total)))
+    rows.sort(key=lambda r: (-r[1], -r[2], r[0]))
+    return rows
+
+
 def _render_watch(snap: dict, prev_snap: dict, body: dict, top: int,
                   interval: float) -> str:
     lines = [f"repro.obs watch — gen {body.get('gen')} pid {body.get('pid')} "
@@ -86,6 +104,13 @@ def _render_watch(snap: dict, prev_snap: dict, body: dict, top: int,
     srv = body.get("server") or {}
     if srv:
         lines.append("  " + "  ".join(f"{k}={v}" for k, v in sorted(srv.items())))
+    faults = fault_rows(snap.get("counters", {}),
+                        prev_snap.get("counters", {}))
+    if faults:
+        lines.append("")
+        lines.append("  faults/degradation (delta per tick):")
+        for label, delta, total in faults:
+            lines.append(f"    {label:<40} +{delta:<8} total {total}")
     lines.append("")
     lines.append(f"  hot branches (top {top}, reads/tick):")
     rows = hot_branches(snap.get("counters", {}),

@@ -14,17 +14,29 @@ Entry points:
 * :class:`RemoteBasketFile` / :func:`connect` — open a
   ``repro://host:port/path`` URL with the local reader API;
 * :class:`TieredCache` — the client cache, shareable across files;
+* :class:`EndpointPool` — replica endpoints with health tracking, shared
+  across files for failover and hedged reads;
 * ``repro.data.pipeline.TokenPipeline`` accepts ``repro://`` shard URLs
   directly, and :class:`repro.io.prefetch.PrefetchReader` accepts a
   ``RemoteBasketFile`` wherever a local ``BasketFile`` goes.
+
+Failure semantics (DESIGN.md §14) live in :mod:`repro.remote.errors`:
+typed timeouts/connect errors, ``ServerBusy`` shedding, replica mismatch,
+and the retry classification the client's backoff policy keys on.
 """
 
 from .cache import TieredCache, basket_key
-from .client import RemoteBasketFile, connect
+from .client import EndpointPool, RemoteBasketFile, connect
+from .errors import (RemoteConnectError, RemoteError, RemoteServerError,
+                     RemoteTimeout, ReplicaMismatchError, ServerBusy,
+                     StaleGenerationError)
 from .protocol import ProtocolError, coalesce, format_url, parse_url
 from .server import BasketServer
 
 __all__ = [
     "BasketServer", "RemoteBasketFile", "connect", "TieredCache",
-    "basket_key", "ProtocolError", "coalesce", "parse_url", "format_url",
+    "basket_key", "EndpointPool", "ProtocolError", "coalesce", "parse_url",
+    "format_url", "RemoteError", "RemoteTimeout", "RemoteConnectError",
+    "RemoteServerError", "StaleGenerationError", "ServerBusy",
+    "ReplicaMismatchError",
 ]

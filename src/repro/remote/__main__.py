@@ -38,6 +38,12 @@ def main(argv=None) -> int:
                     help="coalesce reads across holes up to this many bytes")
     ap.add_argument("--max-span", type=int, default=8 << 20,
                     help="cap one coalesced pread at this many bytes")
+    ap.add_argument("--max-inflight", type=int, default=32,
+                    help="concurrent request executions before queueing")
+    ap.add_argument("--queue-depth", type=int, default=128,
+                    help="admission queue depth before shedding RESP_BUSY")
+    ap.add_argument("--idle-timeout", type=float, default=600.0,
+                    help="close connections idle this many seconds")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -47,7 +53,10 @@ def main(argv=None) -> int:
     from repro.remote import BasketServer
     server = BasketServer(args.root, host=args.host, port=args.port,
                           workers=args.workers, transcode=args.transcode,
-                          max_gap=args.max_gap, max_span=args.max_span)
+                          max_gap=args.max_gap, max_span=args.max_span,
+                          max_inflight=args.max_inflight,
+                          admit_queue=args.queue_depth,
+                          idle_timeout=args.idle_timeout)
     print(f"serving {server.root} on {server.host}:{server.port}",
           flush=True)
     try:

@@ -218,6 +218,25 @@ class TieredCache:
         if q is not None:
             q.join()
 
+    def drop(self, key: tuple) -> None:
+        """Remove ``key`` from both tiers — the corrupt-basket quarantine
+        path: a cached payload that failed its content checksum must not
+        be served again."""
+        fn = None
+        with self._lock:
+            raw = self._mem.pop(key, None)
+            if raw is not None:
+                self._mem_used -= len(raw)
+            rec = self._disk.pop(key, None)
+            if rec is not None:
+                fn, sz, _m = rec
+                self._disk_used -= sz
+        if fn is not None:
+            try:
+                os.remove(fn)
+            except OSError:
+                pass
+
     # -- bookkeeping -----------------------------------------------------
 
     def record_miss(self) -> None:

@@ -20,33 +20,59 @@ server's copy.  The mechanics under the mirror:
   keyed by (path, generation, branch, index) serves decoded re-reads from
   memory and cold re-opens from spilled wire payloads;
 * **prefetch integration** — :meth:`submit_baskets` makes this object a
-  valid source for :class:`repro.io.prefetch.PrefetchReader`: scheduled
-  indices are fetched by a background thread as ONE vectored request per
-  wave, which is how the data pipeline overlaps remote fetch with
-  compute.
+  valid source for :class:`repro.io.prefetch.PrefetchReader`.
+
+Failure semantics (DESIGN.md §14): every socket operation carries the
+per-request ``timeout`` and raises typed errors (``RemoteTimeout``,
+``RemoteConnectError``, ...).  Transport failures are retried with
+capped exponential backoff + jitter against an :class:`EndpointPool`
+that round-robins replicas with health tracking — a dead endpoint is
+cooled down and the read fails over to the next replica (whose catalog
+is verified content-compatible before any basket is trusted).  READV
+waits may be *hedged*: after a p99-derived delay a second replica gets
+the same request and the first good frame wins, the loser is cancelled.
+A basket that decodes but fails its content adler32 is quarantined and
+re-fetched (preferring another replica); if every replica serves the
+same damage a structured ``CorruptBasketError`` surfaces.  Server
+application errors (missing branch, stale generation) are never retried.
+All of it is counted: ``remote.retries{reason}``,
+``remote.hedge{outcome}``.
 """
 
 from __future__ import annotations
 
 import base64
 import queue
+import random
+import select
 import socket
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from repro import obs
-from repro.core.basket import (BasketMeta, byte_offsets, join_baskets,
-                               unpack_basket, unpack_basket_into)
+from repro.core.basket import (BasketMeta, ChecksumError, byte_offsets,
+                               join_baskets, unpack_basket,
+                               unpack_basket_into)
+from repro.core.bfile import CorruptBasketError
 
 from . import protocol as P
 from .cache import TieredCache, basket_key
+from .errors import (RemoteConnectError, RemoteServerError, RemoteTimeout,
+                     ReplicaMismatchError, ServerBusy, StaleGenerationError,
+                     classify_error)
 from .transcode import DEFAULT_ACCEPT
 
-__all__ = ["RemoteBasketFile", "connect", "fetch_stats"]
+__all__ = ["RemoteBasketFile", "EndpointPool", "connect", "fetch_stats"]
+
+# transport-level failures worth a retry (reads are idempotent); server
+# application errors (RemoteServerError) deliberately excluded
+_TRANSPORT = (RemoteTimeout, RemoteConnectError, ReplicaMismatchError,
+              P.ProtocolError, EOFError, OSError)
 
 
 def connect(url: str, **kw) -> "RemoteBasketFile":
@@ -59,20 +85,150 @@ def fetch_stats(host: str, port: int, *, trace: bool = False,
     """One STATS round-trip against a bare ``host:port`` — no catalog, no
     container path, so a monitor (``python -m repro.obs``) can poll any
     live server without knowing what it exports."""
-    sock = socket.create_connection((host, int(port)), timeout=timeout)
+    conn = _Conn(host, int(port), timeout)
     try:
-        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        rfile = sock.makefile("rb")
         body = {"trace": True} if trace else {}
-        sock.sendall(P.pack_frame(P.REQ_STATS, body))
-        ftype, rbody, _payload = P.read_frame(rfile)
+        conn.send(P.pack_frame(P.REQ_STATS, body))
+        ftype, rbody, _payload = conn.recv_frame()
         if ftype == P.RESP_ERROR:
-            raise RuntimeError(f"server error: {rbody.get('error')}")
+            raise RemoteServerError(f"server error: {rbody.get('error')}")
         if ftype != P.RESP_STATS:
             raise P.ProtocolError(f"expected frame {P.RESP_STATS}, got {ftype}")
         return rbody
     finally:
-        sock.close()
+        conn.close()
+
+
+def _as_endpoint(ep) -> tuple[str, int]:
+    if isinstance(ep, str):
+        host, _, port = ep.rpartition(":")
+        if not host or not port:
+            raise ValueError(f"endpoint {ep!r} is not host:port")
+        return host, int(port)
+    host, port = ep
+    return str(host), int(port)
+
+
+class EndpointPool:
+    """Round-robin replica endpoints with health tracking.
+
+    ``pick()`` rotates over endpoints currently believed healthy;
+    ``report(ep, ok)`` feeds connect/request outcomes back.  A failing
+    endpoint is cooled down (skipped) for ``cooldown`` seconds, doubling
+    per consecutive failure up to 8×, so a dead replica costs one probe
+    per cooldown window instead of one per request.  When *every*
+    endpoint is down the least-recently-condemned one is returned anyway
+    — the pool degrades to plain retry rather than deadlocking.  Health
+    state is shared: one pool may serve many ``RemoteBasketFile``s."""
+
+    def __init__(self, endpoints, cooldown: float = 2.0):
+        eps = [_as_endpoint(e) for e in endpoints]
+        if not eps:
+            raise ValueError("EndpointPool needs at least one endpoint")
+        self._eps = eps
+        self.cooldown = float(cooldown)
+        self._lock = threading.Lock()
+        self._fails = {ep: 0 for ep in eps}
+        self._down_until = {ep: 0.0 for ep in eps}
+        self._i = 0
+
+    def __len__(self) -> int:
+        return len(self._eps)
+
+    @property
+    def endpoints(self) -> list[tuple[str, int]]:
+        return list(self._eps)
+
+    def pick(self, exclude=()) -> tuple[str, int]:
+        exclude = set(exclude)
+        now = time.monotonic()
+        with self._lock:
+            n = len(self._eps)
+            order = [(self._i + k) % n for k in range(n)]
+            usable = [j for j in order if self._eps[j] not in exclude]
+            healthy = [j for j in usable if self._down_until[self._eps[j]] <= now]
+            if healthy:
+                j = healthy[0]
+            elif usable:
+                # everything (non-excluded) is down: probe the one whose
+                # cooldown expires soonest — never deadlock
+                j = min(usable, key=lambda k: self._down_until[self._eps[k]])
+            else:
+                j = order[0]
+            self._i = (j + 1) % n
+            return self._eps[j]
+
+    def report(self, ep, ok: bool) -> None:
+        ep = _as_endpoint(ep)
+        with self._lock:
+            if ep not in self._fails:
+                return
+            if ok:
+                self._fails[ep] = 0
+                self._down_until[ep] = 0.0
+            else:
+                self._fails[ep] += 1
+                backoff = self.cooldown * min(2 ** (self._fails[ep] - 1), 8)
+                self._down_until[ep] = time.monotonic() + backoff
+            up = sum(1 for e in self._eps
+                     if self._down_until[e] <= time.monotonic())
+        obs.gauge("remote.endpoints_up").set(up)
+
+    def healthy(self) -> list[tuple[str, int]]:
+        now = time.monotonic()
+        with self._lock:
+            return [e for e in self._eps if self._down_until[e] <= now]
+
+
+class _Conn:
+    """One RBSP connection with socket-level deadlines.
+
+    Unbuffered reader (``makefile(buffering=0)``): no userspace read-ahead,
+    so ``select()`` on the raw socket is an exact "response pending" test —
+    the property the hedging race depends on."""
+
+    __slots__ = ("host", "port", "sock", "rfile")
+
+    def __init__(self, host: str, port: int, timeout: Optional[float]):
+        try:
+            self.sock = socket.create_connection((host, int(port)),
+                                                 timeout=timeout)
+        except (socket.timeout, TimeoutError) as e:
+            raise RemoteTimeout(
+                f"connect to {host}:{port} timed out after {timeout}s") from e
+        except OSError as e:
+            raise RemoteConnectError(
+                f"connect to {host}:{port} failed: {e}") from e
+        self.sock.settimeout(timeout)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.rfile = self.sock.makefile("rb", buffering=0)
+        self.host, self.port = str(host), int(port)
+
+    @property
+    def ep(self) -> tuple[str, int]:
+        return (self.host, self.port)
+
+    def send(self, frame: bytes) -> None:
+        try:
+            self.sock.sendall(frame)
+        except (socket.timeout, TimeoutError) as e:
+            raise RemoteTimeout(
+                f"send to {self.host}:{self.port} timed out") from e
+
+    def recv_frame(self) -> tuple[int, dict, bytes]:
+        try:
+            return P.read_frame(self.rfile)
+        except (socket.timeout, TimeoutError) as e:
+            raise RemoteTimeout(
+                f"recv from {self.host}:{self.port} timed out "
+                f"(dead or stalled peer)") from e
+
+    def close(self) -> None:
+        for c in (self.rfile, self.sock):
+            try:
+                c.close()
+            except OSError:
+                pass
 
 
 class RemoteBasketFile:
@@ -81,24 +237,55 @@ class RemoteBasketFile:
     ``wire``: ``"auto"`` negotiates transcoding under ``objective`` with
     the default accept list; ``None``/``False`` forces plain archive
     payloads; a sequence of codec names is an explicit accept list.
-    """
+
+    Robustness knobs: ``endpoints`` lists replica ``host:port`` pairs (or
+    an :class:`EndpointPool` shared across files); ``timeout`` bounds
+    every connect/send/recv; ``retries`` caps consecutive fruitless
+    transport retries (backoff ``backoff``·2ⁿ capped at ``backoff_max``,
+    ±50 % jitter); ``busy_retries`` separately caps RESP_BUSY shed-retry
+    loops (the server names its own retry-after); ``hedge`` enables
+    hedged READV waits — ``"auto"`` derives the hedge delay from this
+    client's observed p99 READV wait, a float pins it in seconds."""
 
     def __init__(self, url: Optional[str] = None, *, host: Optional[str] = None,
                  port: Optional[int] = None, path: Optional[str] = None,
+                 endpoints=None,
                  wire="auto", objective: str = "max_read_tput",
                  accept: Optional[Sequence[str]] = None,
                  link_mbps: Optional[float] = None,
                  cache: Optional[TieredCache] = None,
                  batch_baskets: int = 32, verify: bool = True,
-                 timeout: float = 30.0):
+                 timeout: float = 30.0, retries: int = 3,
+                 backoff: float = 0.05, backoff_max: float = 1.0,
+                 busy_retries: int = 8,
+                 hedge: Union[None, str, float] = None):
         if url is not None:
             host, port, path = P.parse_url(url)
-        if host is None or port is None or path is None:
-            raise ValueError("need a repro:// url or host=/port=/path=")
+        if endpoints is not None:
+            pool = endpoints if isinstance(endpoints, EndpointPool) \
+                else EndpointPool(endpoints)
+            if host is None:
+                host, port = pool.endpoints[0]
+        else:
+            if host is None or port is None:
+                raise ValueError("need a repro:// url, host=/port=, "
+                                 "or endpoints=")
+            pool = EndpointPool([(host, port)])
+        if path is None:
+            raise ValueError("need a container path")
         self.host, self.port, self.path = host, int(port), str(path)
+        self._pool = pool
         self.verify = verify
         self.batch_baskets = max(int(batch_baskets), 1)
         self.cache = cache
+        self.timeout = float(timeout)
+        self.retries = max(int(retries), 0)
+        self.busy_retries = max(int(busy_retries), 0)
+        self.backoff = float(backoff)
+        self.backoff_max = float(backoff_max)
+        self._hedge = hedge
+        self._rng = random.Random()
+        self._rtts: deque = deque(maxlen=128)   # READV wait samples (s)
         if wire is None or wire is False:
             self._wire = None
         else:
@@ -117,27 +304,22 @@ class RemoteBasketFile:
                 self._wire["link_mbps"] = float(link_mbps)
         self._io_lock = threading.Lock()    # serializes the socket
         self._fetch_lock = threading.Lock()  # lazy fetcher-thread init
-        self._sock = socket.create_connection((self.host, self.port),
-                                              timeout=timeout)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        self._rfile = self._sock.makefile("rb")
+        self._conn: Optional[_Conn] = None
+        self._gen_by_ep: dict[tuple[str, int], tuple] = {}
+        self.branches: Optional[dict] = None
         self._closed = False
         # background fetcher (lazy): serves submit_baskets waves
         self._fetchq: Optional[queue.Queue] = None
         self._fetcher: Optional[threading.Thread] = None
         try:
-            cat = self._request(P.REQ_CATALOG, {"path": self.path})[0]
+            # the opening catalog fetch retries across the pool, so one
+            # dead replica does not fail the open
+            self._with_retry(self._locked_ensure)
         except BaseException:
             # a failed open must not leak the connected socket (probing
             # loops over shard URLs would leak one fd per missing file)
-            self._rfile.close()
-            self._sock.close()
+            self._hard_close_conn()
             raise
-        order = cat.get("order") or list(cat["branches"])
-        self.branches = {n: cat["branches"][n] for n in order}
-        self.tuning = cat.get("tuning", {})
-        self.generation = tuple(cat["generation"])
-        self.server_transcode = bool(cat.get("transcode", False))
         # cache namespace: the endpoint qualifies the path — two servers
         # exporting same-named files (whose inodes can collide across
         # hosts) must never share entries in a shared TieredCache
@@ -165,18 +347,152 @@ class RemoteBasketFile:
         return sum(b["meta"]["orig_len"]
                    for n in names for b in self.branches[n]["baskets"])
 
+    # -- connection management ------------------------------------------
+
+    def _locked_ensure(self):
+        with self._io_lock:
+            return self._ensure_conn()
+
+    def _ensure_conn(self) -> _Conn:
+        """The live primary connection, establishing (and adopting the
+        endpoint's catalog generation) if needed.  Call under _io_lock."""
+        if self._conn is not None:
+            return self._conn
+        ep = self._pool.pick()
+        try:
+            conn = _Conn(ep[0], ep[1], self.timeout)
+        except (RemoteTimeout, RemoteConnectError):
+            self._pool.report(ep, False)
+            raise
+        try:
+            gen = self._adopt_ep(conn)
+        except RemoteServerError:
+            conn.close()
+            raise                      # app error: the endpoint is healthy
+        except BaseException:
+            conn.close()
+            self._pool.report(ep, False)
+            raise
+        self._pool.report(ep, True)
+        self.generation = gen          # the primary endpoint's generation
+        self._conn = conn
+        return conn
+
+    def _adopt_ep(self, conn: _Conn) -> tuple:
+        """The catalog generation for ``conn``'s endpoint — fetched and
+        content-verified on first contact, cached after.  Failing over to
+        (or hedging against) a replica that serves *different* content
+        under the same path raises :class:`ReplicaMismatchError` instead
+        of silently mixing files."""
+        gen = self._gen_by_ep.get(conn.ep)
+        if gen is not None:
+            return gen
+        conn.send(P.pack_frame(P.REQ_CATALOG, {"path": self.path}))
+        body, _ = self._recv_on(conn, P.RESP_CATALOG)
+        gen = tuple(body["generation"])
+        if self.branches is None:
+            # first catalog: adopt as this reader's canonical TOC
+            order = body.get("order") or list(body["branches"])
+            self.branches = {n: body["branches"][n] for n in order}
+            self.tuning = body.get("tuning", {})
+            self.server_transcode = bool(body.get("transcode", False))
+        else:
+            self._check_compat(conn.ep, body)
+        self._gen_by_ep[conn.ep] = gen
+        return gen
+
+    def _check_compat(self, ep, body: dict) -> None:
+        """Replicas must agree on *content*: same branches, same basket
+        row ranges, same raw lengths and checksums.  Offsets and wire
+        compression may differ (a replica may be repacked)."""
+        bs = body.get("branches") or {}
+        if set(bs) != set(self.branches):
+            raise ReplicaMismatchError(
+                f"replica {ep[0]}:{ep[1]} serves different branches for "
+                f"{self.path!r}")
+        for n, e in self.branches.items():
+            o = bs[n]
+            if (o.get("dtype") != e["dtype"]
+                    or list(o.get("shape") or []) != list(e["shape"])
+                    or len(o.get("baskets") or []) != len(e["baskets"])):
+                raise ReplicaMismatchError(
+                    f"replica {ep[0]}:{ep[1]} branch {n!r} layout differs")
+            for a, b in zip(e["baskets"], o["baskets"]):
+                am, bm = a["meta"], b["meta"]
+                if (am["orig_len"], am["checksum"], am["entry_start"]) != \
+                        (bm["orig_len"], bm["checksum"], bm["entry_start"]):
+                    raise ReplicaMismatchError(
+                        f"replica {ep[0]}:{ep[1]} branch {n!r} content "
+                        "differs (checksum mismatch)")
+
+    def _drop_conn(self, report: bool = True) -> None:
+        with self._io_lock:
+            conn, self._conn = self._conn, None
+        if conn is not None:
+            if report:
+                self._pool.report(conn.ep, False)
+            conn.close()
+
+    def _hard_close_conn(self) -> None:
+        conn, self._conn = self._conn, None
+        if conn is not None:
+            conn.close()
+
+    # -- retry machinery -------------------------------------------------
+
+    def _count_retry(self, reason: str) -> None:
+        obs.counter("remote.retries", reason=reason).inc()
+
+    def _sleep_backoff(self, attempt: int, delay: Optional[float] = None) -> None:
+        d = delay if delay is not None \
+            else min(self.backoff * (2 ** attempt), self.backoff_max)
+        time.sleep(max(d, 0.001) * (0.5 + self._rng.random()))
+
+    def _with_retry(self, op):
+        """Run ``op`` (which uses the connection under _io_lock), retrying
+        transport failures with backoff+jitter against the pool and
+        RESP_BUSY sheds on the server's own schedule.  Application errors
+        surface immediately."""
+        attempt = busy = 0
+        while True:
+            try:
+                return op()
+            except ServerBusy as e:
+                # the frame was consumed; the connection is still in sync
+                if busy >= self.busy_retries:
+                    raise
+                busy += 1
+                self._count_retry("busy")
+                self._sleep_backoff(0, min(e.retry_after, 1.0))
+            except RemoteServerError:
+                raise
+            except _TRANSPORT as e:
+                self._drop_conn()
+                if attempt >= self.retries:
+                    raise
+                self._count_retry(classify_error(e))
+                self._sleep_backoff(attempt)
+                attempt += 1
+
     # -- wire ------------------------------------------------------------
 
-    def _send(self, ftype: int, body: dict) -> None:
+    def _send_on(self, conn: _Conn, ftype: int, body: dict) -> None:
         frame = P.pack_frame(ftype, body)
         obs.counter("rbsp.tx_bytes").inc(len(frame))
-        self._sock.sendall(frame)
+        conn.send(frame)
 
-    def _recv(self, want: int) -> tuple[dict, bytes]:
-        ftype, body, payload = P.read_frame(self._rfile)
+    def _recv_on(self, conn: _Conn, want: int) -> tuple[dict, bytes]:
+        ftype, body, payload = conn.recv_frame()
         obs.counter("rbsp.rx_payload_bytes").inc(len(payload))
+        if ftype == P.RESP_BUSY:
+            raise ServerBusy(
+                f"server busy: {body.get('error', 'shed')}",
+                retry_after=float(body.get("retry_after_s", 0.05)))
         if ftype == P.RESP_ERROR:
-            raise RuntimeError(f"server error: {body.get('error')}")
+            msg = f"server error: {body.get('error')}"
+            if "stale generation" in str(body.get("error", "")):
+                raise StaleGenerationError(msg)
+            raise RemoteServerError(msg)
         if ftype != want:
             raise P.ProtocolError(f"expected frame {want}, got {ftype}")
         return body, payload
@@ -188,14 +504,19 @@ class RemoteBasketFile:
                     P.REQ_PING: P.RESP_PING,
                     P.REQ_STATS: P.RESP_STATS}[ftype]
         verb = P.VERB_NAMES.get(ftype, str(ftype))
-        t0 = time.perf_counter()
-        with obs.trace.span("rbsp.request", cat="client", verb=verb):
-            with self._io_lock:
-                self._send(ftype, body)
-                out = self._recv(want)
-        obs.histogram("rbsp.rtt_s", verb=verb).observe(
-            time.perf_counter() - t0)
-        return out
+
+        def op():
+            t0 = time.perf_counter()
+            with obs.trace.span("rbsp.request", cat="client", verb=verb):
+                with self._io_lock:
+                    conn = self._ensure_conn()
+                    self._send_on(conn, ftype, body)
+                    out = self._recv_on(conn, want)
+            obs.histogram("rbsp.rtt_s", verb=verb).observe(
+                time.perf_counter() - t0)
+            return out
+
+        return self._with_retry(op)
 
     def ping(self) -> bool:
         return bool(self._request(P.REQ_PING, {})[0].get("ok"))
@@ -207,8 +528,8 @@ class RemoteBasketFile:
         body = {"trace": True} if trace else {}
         return self._request(P.REQ_STATS, body)[0]
 
-    def _readv_body(self, name: str, idxs: Sequence[int]) -> dict:
-        return {"path": self.path, "generation": list(self.generation),
+    def _readv_body(self, name: str, idxs: Sequence[int], gen) -> dict:
+        return {"path": self.path, "generation": list(gen),
                 "baskets": [[name, int(i)] for i in idxs],
                 "wire": self._wire}
 
@@ -227,21 +548,98 @@ class RemoteBasketFile:
                                   "basket lengths")
         return out
 
-    def _resync(self, inflight: int) -> None:
+    def _resync(self, conn: _Conn, inflight: int) -> None:
         """Drain responses for requests already on the wire after one of
         them failed — a pipelined connection must never be left a response
         behind (the next caller would read an orphaned RESP_READV as its
         own and silently scatter the wrong baskets).  If draining itself
-        fails the stream state is unknowable: poison the socket so every
-        later use fails loudly instead of desynchronizing."""
+        fails the stream state is unknowable: drop the connection so the
+        next use reconnects cleanly."""
         try:
             for _ in range(inflight):
-                P.read_frame(self._rfile)
+                conn.recv_frame()
         except Exception:
-            try:
-                self._sock.close()
-            except OSError:
-                pass
+            conn.close()
+            if self._conn is conn:
+                self._conn = None
+
+    # -- hedged READV ----------------------------------------------------
+
+    def _hedge_delay(self) -> Optional[float]:
+        h = self._hedge
+        if not h:
+            return None
+        if h == "auto":
+            if len(self._rtts) < 16:
+                return None            # not enough signal yet
+            s = sorted(self._rtts)
+            return max(0.001, s[min(len(s) - 1, int(0.99 * len(s)))])
+        return float(h)
+
+    def _race_hedge(self, conn: _Conn, name: str, group: Sequence[int]):
+        """The primary READV wait exceeded the hedge delay: fire the same
+        request at a second replica (preferring a different endpoint) and
+        race the two sockets; first good frame wins, the loser is closed.
+        Returns ``(body, payload, primary_won)`` or ``None`` when the
+        hedge could not be launched (caller falls back to the primary)."""
+        ep = self._pool.pick(exclude={conn.ep})
+        try:
+            h = _Conn(ep[0], ep[1], self.timeout)
+        except (RemoteTimeout, RemoteConnectError):
+            self._pool.report(ep, False)
+            obs.counter("remote.hedge", outcome="error").inc()
+            return None
+        try:
+            hgen = self._adopt_ep(h)
+            self._send_on(h, P.REQ_READV, self._readv_body(name, group, hgen))
+        except BaseException:
+            h.close()
+            obs.counter("remote.hedge", outcome="error").inc()
+            return None
+        obs.counter("remote.hedge", outcome="fired").inc()
+        deadline = time.monotonic() + self.timeout
+        try:
+            while True:
+                remain = deadline - time.monotonic()
+                if remain <= 0:
+                    raise RemoteTimeout(
+                        f"hedged readv wait exceeded {self.timeout}s")
+                r, _, _ = select.select([conn.sock, h.sock], [], [], remain)
+                if conn.sock in r:
+                    # primary answered first: cancel the hedge (loser's
+                    # response dies with its one-shot connection)
+                    h.close()
+                    obs.counter("remote.hedge", outcome="lose").inc()
+                    return (*self._recv_on(conn, P.RESP_READV), True)
+                if h.sock in r:
+                    try:
+                        body, payload = self._recv_on(h, P.RESP_READV)
+                    except Exception:
+                        h.close()
+                        obs.counter("remote.hedge", outcome="error").inc()
+                        return None    # bad hedge: wait out the primary
+                    h.close()
+                    obs.counter("remote.hedge", outcome="win").inc()
+                    return body, payload, False
+        except BaseException:
+            h.close()
+            raise
+
+    def _recv_readv(self, conn: _Conn, name: str, group: Sequence[int]):
+        """One READV response, hedged when configured.  Returns
+        ``(body, payload, primary_won)``; ``primary_won=False`` means the
+        caller must retire the primary connection (its response for this
+        group is orphaned in flight)."""
+        delay = self._hedge_delay()
+        if delay is not None:
+            r, _, _ = select.select([conn.sock], [], [], delay)
+            if not r:
+                res = self._race_hedge(conn, name, group)
+                if res is not None:
+                    return res
+        return (*self._recv_on(conn, P.RESP_READV), True)
+
+    # -- vectored fetch --------------------------------------------------
 
     def fetch_wire(self, name: str, idxs: Sequence[int],
                    on_batch=None) -> list[tuple[bytes, dict]]:
@@ -252,61 +650,146 @@ class RemoteBasketFile:
         ``on_batch(batch_idxs, pairs)`` streams each batch to the caller
         as its response lands (decode overlaps the next batch's transfer
         and only one batch of wire bytes is ever held); without it the
-        pairs for all ``idxs`` are returned as one list."""
+        pairs for all ``idxs`` are returned as one list.  Batches may be
+        re-ordered across retries/shed-redos — ``on_batch`` consumers
+        must scatter by index, which every in-tree consumer does.
+
+        Transport failures retry with backoff against the pool, resuming
+        from the first undelivered batch; RESP_BUSY sheds re-queue just
+        the shed batches after the server's retry-after; a hedge win
+        rotates the connection and continues without burning a retry."""
         idxs = list(idxs)
         if not idxs:
             return []
-        groups = [idxs[i:i + self.batch_baskets]
-                  for i in range(0, len(idxs), self.batch_baskets)]
-        out: list[tuple[bytes, dict]] = []
+        out: dict[int, tuple[bytes, dict]] = {}
+
+        def deliver(bidxs, pairs):
+            if self.cache is not None:
+                # async spill: the background writer does the file I/O —
+                # a slow disk must not stall the pipeline
+                for i, (p, m) in zip(bidxs, pairs):
+                    self.cache.put_wire_async(self._key(name, i), p, m)
+            if on_batch is not None:
+                on_batch(bidxs, pairs)
+            else:
+                for i, pr in zip(bidxs, pairs):
+                    out[i] = pr
+
         wait_h = obs.histogram("rbsp.readv_wait_s")
+        pending = idxs
+        attempt = busy_attempt = 0
         with obs.trace.span("rbsp.fetch_wire", cat="client", branch=name,
-                            baskets=len(idxs), batches=len(groups)), \
-                self._io_lock:
-            # pipeline: request g+1 is on the wire while we block on g's
-            # response — the server answers a connection's requests in
-            # order, so responses arrive in group order
-            sent = consumed = 0
-            try:
-                self._send(P.REQ_READV, self._readv_body(name, groups[0]))
-                sent += 1
-                for g in range(len(groups)):
-                    if g + 1 < len(groups):
-                        self._send(P.REQ_READV,
-                                   self._readv_body(name, groups[g + 1]))
-                        sent += 1
-                    try:
-                        with wait_h.time():
-                            body, payload = self._recv(P.RESP_READV)
-                    finally:
-                        # _recv consumed one frame even when it raised on
-                        # a RESP_ERROR; only a transport/framing failure
-                        # leaves the frame unconsumed
-                        consumed += 1
-                    pairs = self._split_response(body, payload)
-                    if self.cache is not None:
-                        # async spill: the background writer does the file
-                        # I/O — a slow disk must not stall the pipeline
-                        # (and every _io_lock waiter behind it)
-                        for i, (p, m) in zip(groups[g], pairs):
-                            self.cache.put_wire_async(
-                                self._key(name, i), p, m)
-                    if on_batch is not None:
-                        on_batch(groups[g], pairs)
-                    else:
-                        out.extend(pairs)
-            except (P.ProtocolError, OSError):
-                # framing/transport failure: stream state unknowable —
-                # poison the socket so later use fails loudly
+                            baskets=len(idxs)):
+            while pending:
+                done: list[int] = []
+                busy: list[int] = []
+                busy_delay = 0.0
+                hedge_rotate = False
+                err: Optional[BaseException] = None
                 try:
-                    self._sock.close()
-                except OSError:
-                    pass
+                    with self._io_lock:
+                        hedge_rotate = self._fetch_round(
+                            name, pending, deliver, wait_h, done, busy,
+                            lambda d: None)
+                        busy_delay = self._last_busy_delay
+                except RemoteServerError:
+                    raise            # app error (already resynced)
+                except ServerBusy as e:
+                    # shed during (re)connect adoption — connection gone
+                    err = e
+                    busy_delay = e.retry_after
+                except _TRANSPORT as e:
+                    err = e
+                    self._drop_conn()
+                delivered = set(done)
+                pending = [i for i in pending if i not in delivered]
+                if err is not None:
+                    if isinstance(err, ServerBusy):
+                        if busy_attempt >= self.busy_retries:
+                            raise err
+                        busy_attempt += 1
+                        self._count_retry("busy")
+                        self._sleep_backoff(0, min(busy_delay, 1.0))
+                        continue
+                    if done:
+                        attempt = 0  # progress resets the fruitless count
+                    if attempt >= self.retries:
+                        raise err
+                    self._count_retry(classify_error(err))
+                    self._sleep_backoff(attempt)
+                    attempt += 1
+                    continue
+                if hedge_rotate:
+                    # hedge won: the primary has an orphaned response in
+                    # flight — rotate connections, keep going (progress
+                    # was made; this is not a failure)
+                    self._drop_conn(report=False)
+                    continue
+                if busy:
+                    if busy_attempt >= self.busy_retries:
+                        raise ServerBusy(
+                            "server busy (shed retries exhausted)",
+                            retry_after=busy_delay)
+                    busy_attempt += 1
+                    self._count_retry("busy")
+                    self._sleep_backoff(0, min(max(busy_delay, 0.005), 1.0))
+                    pending = busy
+                    continue
+                break
+        if on_batch is None:
+            return [out[i] for i in idxs]
+        return []
+
+    def _fetch_round(self, name, todo, deliver, wait_h, done, busy,
+                     _unused) -> bool:
+        """One pipelined pass over ``todo`` on the primary connection.
+        Appends delivered idxs to ``done`` and shed idxs to ``busy`` (so
+        the caller knows the exact frontier even when this raises mid-
+        round).  Returns True when a hedge win means the caller must
+        rotate the connection.  Call under _io_lock."""
+        self._last_busy_delay = 0.0
+        conn = self._ensure_conn()
+        gen = self._gen_by_ep[conn.ep]
+        groups = [todo[i:i + self.batch_baskets]
+                  for i in range(0, len(todo), self.batch_baskets)]
+        # pipeline: request g+1 is on the wire while we block on g's
+        # response — the server answers a connection's requests in
+        # order, so responses arrive in group order
+        sent = consumed = 0
+        self._send_on(conn, P.REQ_READV, self._readv_body(name, groups[0], gen))
+        sent += 1
+        for g in range(len(groups)):
+            if g + 1 < len(groups):
+                self._send_on(conn, P.REQ_READV,
+                              self._readv_body(name, groups[g + 1], gen))
+                sent += 1
+            t0 = time.perf_counter()
+            try:
+                body, payload, primary = self._recv_readv(
+                    conn, name, groups[g])
+            except ServerBusy as e:
+                # this group was shed at admission; later pipelined groups
+                # get their own answers — keep consuming them
+                consumed += 1
+                busy.extend(groups[g])
+                self._last_busy_delay = max(self._last_busy_delay,
+                                            e.retry_after)
+                continue
+            except RemoteServerError:
+                consumed += 1
+                self._resync(conn, sent - consumed)
                 raise
-            except BaseException:
-                self._resync(sent - consumed)
-                raise
-        return out
+            if primary:
+                consumed += 1
+                dt = time.perf_counter() - t0
+                wait_h.observe(dt)
+                self._rtts.append(dt)
+            pairs = self._split_response(body, payload)
+            deliver(groups[g], pairs)
+            done.extend(groups[g])
+            if not primary:
+                return True          # hedge won: rotate the connection
+        return False
 
     # -- decode ----------------------------------------------------------
 
@@ -327,20 +810,58 @@ class RemoteBasketFile:
         d = self._dictionary(entry) if meta.has_dict else None
         return unpack_basket_into(payload, meta, out, d, verify=self.verify)
 
+    # -- corrupt-basket quarantine ---------------------------------------
+
+    def _refetch_raw(self, name: str, i: int,
+                     verify: Optional[bool] = None) -> bytes:
+        """A basket decoded but failed its content adler32: drop any
+        cached copy, rotate to another replica, and re-fetch until a copy
+        verifies.  If every attempt serves the same damage, raise the
+        structured :class:`CorruptBasketError` naming branch/index/offset."""
+        last: Optional[BaseException] = None
+        for _ in range(max(2, len(self._pool))):
+            self._count_retry("corrupt")
+            if self.cache is not None:
+                self.cache.drop(self._key(name, i))
+            # prefer a different replica for the refetch: round-robin
+            # rotates on reconnect
+            self._drop_conn(report=False)
+            try:
+                (p, m), = self.fetch_wire(name, [i])
+                raw = self._decode(name, p, m, True)
+            except ChecksumError as e:
+                last = e
+                continue
+            except _TRANSPORT as e:
+                last = e
+                continue
+            if self.cache is not None:
+                self.cache.put_decoded(self._key(name, i), raw)
+            return raw
+        b = self.branches[name]["baskets"][i]
+        raise CorruptBasketError(self._cache_ns, name, i,
+                                 int(b.get("offset", -1)), cause=last)
+
     def read_basket_raw(self, name: str, i: int) -> bytes:
-        """Decoded raw bytes of one basket (cache-aware)."""
+        """Decoded raw bytes of one basket (cache-aware, quarantining)."""
         if self.cache is not None:
             raw = self.cache.get_decoded(self._key(name, i))
             if raw is not None:
                 return raw
             w = self.cache.get_wire(self._key(name, i))
             if w is not None:
-                raw = self._decode(name, *w)
+                try:
+                    raw = self._decode(name, *w)
+                except ChecksumError:
+                    return self._refetch_raw(name, i)
                 self.cache.put_decoded(self._key(name, i), raw)
                 return raw
             self.cache.record_miss()
         (p, m), = self.fetch_wire(name, [i])
-        raw = self._decode(name, p, m)
+        try:
+            raw = self._decode(name, p, m)
+        except ChecksumError:
+            return self._refetch_raw(name, i)
         if self.cache is not None:
             self.cache.put_decoded(self._key(name, i), raw)
         return raw
@@ -352,14 +873,24 @@ class RemoteBasketFile:
             if raw is None:
                 w = self.cache.get_wire(self._key(name, i))
                 if w is not None:
-                    return self._decode_into(name, w[0], w[1], out)
-                self.cache.record_miss()
-            else:
+                    try:
+                        return self._decode_into(name, w[0], w[1], out)
+                    except ChecksumError:
+                        raw = self._refetch_raw(name, i)
+                else:
+                    self.cache.record_miss()
+            if raw is not None:
                 b = np.frombuffer(raw, dtype=np.uint8)
                 np.asarray(out).reshape(-1).view(np.uint8)[:b.size] = b
                 return b.size
         (p, m), = self.fetch_wire(name, [i])
-        return self._decode_into(name, p, m, out)
+        try:
+            return self._decode_into(name, p, m, out)
+        except ChecksumError:
+            raw = self._refetch_raw(name, i)
+            b = np.frombuffer(raw, dtype=np.uint8)
+            np.asarray(out).reshape(-1).view(np.uint8)[:b.size] = b
+            return b.size
 
     # -- bulk reads ------------------------------------------------------
 
@@ -388,7 +919,9 @@ class RemoteBasketFile:
         """Whole-branch read, byte-identical to the local
         ``BasketFile.read_branch`` of the served file.  The destination is
         allocated once; cached decoded baskets scatter-copy, everything
-        else decodes wire payloads straight into its slice."""
+        else decodes wire payloads straight into its slice.  Baskets that
+        fail their content checksum are re-fetched (another replica when
+        available) after the bulk fetch completes."""
         entry = self.branches[name]
         n = len(entry["baskets"])
         out = np.empty(tuple(entry["shape"]), dtype=np.dtype(entry["dtype"]))
@@ -407,9 +940,16 @@ class RemoteBasketFile:
         decoded, wires, missing = self._classify(name, range(n))
         for i, raw in decoded.items():
             flat[offs[i]:offs[i] + lens[i]] = np.frombuffer(raw, np.uint8)
+        corrupt: list[int] = []
 
         def _land(i: int, p, m) -> None:
-            self._decode_into(name, p, m, flat[offs[i]:offs[i] + lens[i]])
+            try:
+                self._decode_into(name, p, m, flat[offs[i]:offs[i] + lens[i]])
+            except ChecksumError:
+                # collected, not refetched inline: this runs inside the
+                # fetch pipeline's lock — refetching here would deadlock
+                corrupt.append(i)
+                return
             if keep:
                 self.cache.put_decoded(
                     self._key(name, i), bytes(flat[offs[i]:offs[i] + lens[i]]))
@@ -422,6 +962,9 @@ class RemoteBasketFile:
             # one batch of wire payloads is ever held in memory
             self.fetch_wire(name, missing, on_batch=lambda bidxs, pairs: [
                 _land(i, p, m) for i, (p, m) in zip(bidxs, pairs)])
+        for i in corrupt:
+            raw = self._refetch_raw(name, i)
+            flat[offs[i]:offs[i] + lens[i]] = np.frombuffer(raw, np.uint8)
         return out
 
     def read_entries(self, name: str, start: int, stop: int) -> np.ndarray:
@@ -454,7 +997,11 @@ class RemoteBasketFile:
                 flat[off:off + ln] = np.frombuffer(decoded[i], np.uint8)
             else:
                 p, m = wires[i] if i in wires else fetched[i]
-                self._decode_into(name, p, m, flat[off:off + ln])
+                try:
+                    self._decode_into(name, p, m, flat[off:off + ln])
+                except ChecksumError:
+                    raw = self._refetch_raw(name, i)
+                    flat[off:off + ln] = np.frombuffer(raw, np.uint8)
         return arr[start - first_entry: stop - first_entry].copy()
 
     # -- PrefetchReader source hook --------------------------------------
@@ -490,9 +1037,14 @@ class RemoteBasketFile:
                 return
             name, idxs, futs, verify = item
             fut_of = dict(zip(idxs, futs))
+            corrupt: list[int] = []
 
             def _deliver(i: int, payload, meta_json) -> None:
-                raw = self._decode(name, payload, meta_json, verify)
+                try:
+                    raw = self._decode(name, payload, meta_json, verify)
+                except ChecksumError:
+                    corrupt.append(i)   # refetched after the wave lands
+                    return
                 if self.cache is not None:
                     self.cache.put_decoded(self._key(name, i), raw)
                 fut_of[i].set_result(raw)
@@ -513,6 +1065,8 @@ class RemoteBasketFile:
                                     on_batch=lambda bidxs, pairs: [
                                         _deliver(i, p, m)
                                         for i, (p, m) in zip(bidxs, pairs)])
+                for i in corrupt:
+                    fut_of[i].set_result(self._refetch_raw(name, i, verify))
             except BaseException as e:
                 for fut in futs:
                     if not fut.done():
@@ -527,10 +1081,9 @@ class RemoteBasketFile:
         if self._fetchq is not None:
             self._fetchq.put(None)
             self._fetcher.join(timeout=5)
-        try:
-            self._sock.close()
-        except OSError:
-            pass
+        # close without taking _io_lock: a holder blocked in a dead recv
+        # gets its socket yanked (failing fast) instead of us deadlocking
+        self._hard_close_conn()
 
     def __enter__(self):
         return self

@@ -26,6 +26,9 @@ Frame types::
     REQ_PING      {}                                     -> RESP_PING
     REQ_STATS     {} | {"trace": true}                   -> RESP_STATS
     RESP_ERROR    {"error"}   (any request may answer this)
+    RESP_BUSY     {"error": "busy", "retry_after_s"}
+                  (load shedding: the server's admission queue is
+                  saturated; retry after the suggested delay)
 
 ``REQ_STATS`` is the observability verb (DESIGN.md §13): the server
 answers with a generation-stamped canonical-JSON snapshot of its obs
@@ -51,7 +54,8 @@ from repro.core.checksum import adler32_hw
 __all__ = [
     "MAGIC", "ProtocolError",
     "REQ_CATALOG", "REQ_READV", "REQ_PING", "REQ_STATS",
-    "RESP_CATALOG", "RESP_READV", "RESP_PING", "RESP_STATS", "RESP_ERROR",
+    "RESP_CATALOG", "RESP_READV", "RESP_PING", "RESP_STATS",
+    "RESP_BUSY", "RESP_ERROR",
     "VERB_NAMES",
     "pack_frame", "read_frame", "recv_exact",
     "coalesce", "parse_url", "format_url",
@@ -70,10 +74,12 @@ RESP_CATALOG = 16
 RESP_READV = 17
 RESP_PING = 18
 RESP_STATS = 19
+RESP_BUSY = 30
 RESP_ERROR = 31
 
 _TYPES = {REQ_CATALOG, REQ_READV, REQ_PING, REQ_STATS,
-          RESP_CATALOG, RESP_READV, RESP_PING, RESP_STATS, RESP_ERROR}
+          RESP_CATALOG, RESP_READV, RESP_PING, RESP_STATS,
+          RESP_BUSY, RESP_ERROR}
 
 # human-readable verb names for metric labels and error log lines
 VERB_NAMES = {REQ_CATALOG: "catalog", REQ_READV: "readv",
@@ -123,8 +129,14 @@ def read_frame(rfile) -> tuple[int, dict, bytes]:
     head = rfile.read(_HEADER.size)
     if not head:
         raise EOFError("end of stream")
-    if len(head) < _HEADER.size:
-        raise ProtocolError(f"truncated header ({len(head)} bytes)")
+    while len(head) < _HEADER.size:
+        # unbuffered readers (the hedging client's raw SocketIO) may
+        # return a partial header on a segment boundary; loop, and treat
+        # EOF mid-header as the truncation it is
+        more = rfile.read(_HEADER.size - len(head))
+        if not more:
+            raise ProtocolError(f"truncated header ({len(head)} bytes)")
+        head += more
     magic, ftype, body_len, payload_len, payload_sum = _HEADER.unpack(head)
     if magic != MAGIC:
         raise ProtocolError(f"bad magic {magic!r}")

@@ -23,12 +23,21 @@ answers with one frame.  Request vectorization + coalescing is where the
 latency win comes from (arXiv:1804.03326's vector-read argument); the
 per-request transcode is where the archive/analysis split is served from
 one copy of the data.
+
+Degradation under load is graceful, not accidental (DESIGN.md §14): a
+bounded admission gate (``max_inflight`` concurrent requests, then a
+bounded wait queue) sheds excess work with ``RESP_BUSY`` + a load-scaled
+retry-after instead of queueing unboundedly until every client times out;
+idle connections are reaped after ``idle_timeout``; and ``close()`` drains
+— in-flight requests finish (bounded by ``drain_timeout``) before
+lingering connections are forcibly closed.
 """
 
 from __future__ import annotations
 
 import logging
 import os
+import socket
 import socketserver
 import threading
 import time
@@ -63,23 +72,59 @@ class _Catalog:
 
 
 class _Handler(socketserver.StreamRequestHandler):
+    def setup(self):
+        super().setup()
+        srv: "BasketServer" = self.server.basket_server
+        # per-connection idle reaping: a client that stops talking (or a
+        # half-open TCP ghost) releases its handler thread instead of
+        # pinning it forever
+        if srv.idle_timeout:
+            self.connection.settimeout(srv.idle_timeout)
+        srv._register(self.connection)
+
+    def finish(self):
+        self.server.basket_server._unregister(self.connection)
+        try:
+            super().finish()
+        except OSError:
+            pass                    # drain force-closed the socket under us
+
     def handle(self):
         srv: "BasketServer" = self.server.basket_server
         peer = "%s:%s" % (self.client_address[0], self.client_address[1])
         seq = 0                     # per-connection request sequence
-        while True:
+        while not srv._draining.is_set():
             try:
                 ftype, body, _payload = P.read_frame(self.rfile)
             except EOFError:
+                return
+            except (socket.timeout, TimeoutError):
+                obs.counter("server.idle_closed").inc()
                 return
             except P.ProtocolError as e:
                 # malformed frame: answer once, then drop the connection —
                 # framing is gone, nothing later on this stream is trusted
                 obs.counter("server.errors", verb="protocol").inc()
-                self._reply(P.RESP_ERROR, {"error": f"protocol: {e}"})
+                try:
+                    self._reply(P.RESP_ERROR, {"error": f"protocol: {e}"})
+                except OSError:
+                    pass
                 return
+            except OSError:
+                return              # force-closed mid-read (drain)
             seq += 1
             verb = P.VERB_NAMES.get(ftype, str(ftype))
+            if not srv._admit():
+                # saturated: shed with a load-scaled retry-after rather
+                # than queueing until every waiting client times out
+                obs.counter("server.shed").inc()
+                try:
+                    self._reply(P.RESP_BUSY, {"error": "busy",
+                                              "retry_after_s":
+                                              srv._retry_after()})
+                except OSError:
+                    return
+                continue
             t0 = time.perf_counter()
             try:
                 with obs.trace.span("rbsp.serve", cat="server", verb=verb):
@@ -100,6 +145,8 @@ class _Handler(socketserver.StreamRequestHandler):
                     time.perf_counter() - t0)
             except BrokenPipeError:
                 return
+            except (socket.timeout, TimeoutError):
+                return              # peer stopped reading our reply
             except Exception as e:   # per-request fault isolation
                 obs.counter("server.errors", verb=verb).inc()
                 _LOG.warning("request failed (peer=%s seq=%d verb=%s): %r",
@@ -108,6 +155,8 @@ class _Handler(socketserver.StreamRequestHandler):
                     self._reply(P.RESP_ERROR, {"error": str(e)})
                 except OSError:
                     return
+            finally:
+                srv._finish_request()
 
     def _reply(self, ftype: int, body: dict, payload: bytes = b"") -> None:
         self.wfile.write(P.pack_frame(ftype, body, payload))
@@ -128,23 +177,47 @@ class BasketServer:
     ``port=0`` binds an ephemeral port (read it back from :attr:`port`) —
     the test/benchmark loopback pattern.  ``transcode=False`` disables
     wire transcoding server-wide regardless of what clients request.
+
+    Load/lifecycle knobs: at most ``max_inflight`` requests execute
+    concurrently; up to ``admit_queue`` more wait (each at most
+    ``admit_timeout`` seconds) before being shed with ``RESP_BUSY``;
+    connections idle longer than ``idle_timeout`` are closed; ``close()``
+    lets in-flight requests finish for up to ``drain_timeout`` seconds
+    before force-closing what remains.
     """
 
     def __init__(self, root: str, host: str = "127.0.0.1", port: int = 0,
                  workers: int = 4, transcode: bool = True,
                  max_gap: int = 64 << 10, max_span: int = 8 << 20,
-                 engine: Optional[CompressionEngine] = None):
+                 engine: Optional[CompressionEngine] = None,
+                 max_inflight: int = 32, admit_queue: int = 128,
+                 admit_timeout: float = 5.0, idle_timeout: float = 600.0,
+                 drain_timeout: float = 10.0):
         self.root = os.path.abspath(root)
         if not os.path.isdir(self.root):
             raise NotADirectoryError(self.root)
         self.transcode = bool(transcode)
         self.max_gap = int(max_gap)
         self.max_span = int(max_span)
+        self.max_inflight = max(int(max_inflight), 1)
+        self.admit_queue = max(int(admit_queue), 0)
+        self.admit_timeout = float(admit_timeout)
+        self.idle_timeout = float(idle_timeout)
+        self.drain_timeout = float(drain_timeout)
         self.engine = engine if engine is not None \
             else CompressionEngine(workers)
         self._owns_engine = engine is None
         self._catalogs: dict[str, _Catalog] = {}
         self._cat_lock = threading.Lock()
+        # admission gate: a semaphore bounds concurrency; the queued
+        # counter bounds how many may *wait* for a slot
+        self._sem = threading.BoundedSemaphore(self.max_inflight)
+        self._load_cond = threading.Condition()
+        self._inflight = 0
+        self._queued = 0
+        self._draining = threading.Event()
+        self._conns: set = set()
+        self._conn_lock = threading.Lock()
         self._tcp = _TCPServer((host, port), _Handler)
         self._tcp.basket_server = self
         self._thread: Optional[threading.Thread] = None
@@ -156,6 +229,47 @@ class BasketServer:
                       "bytes_disk": 0, "bytes_wire": 0, "transcoded": 0}
         self._stats_gen = 0           # bumps per STATS response (under lock)
         self._t_start = time.time()
+
+    # -- admission / load shedding ---------------------------------------
+
+    def _register(self, conn) -> None:
+        with self._conn_lock:
+            self._conns.add(conn)
+
+    def _unregister(self, conn) -> None:
+        with self._conn_lock:
+            self._conns.discard(conn)
+
+    def _admit(self) -> bool:
+        """Take an execution slot, waiting in the bounded admission queue
+        when the pool is saturated.  False means the request must be shed."""
+        if self._sem.acquire(blocking=False):
+            with self._load_cond:
+                self._inflight += 1
+            return True
+        with self._load_cond:
+            if self._queued >= self.admit_queue or self._draining.is_set():
+                return False
+            self._queued += 1
+        ok = self._sem.acquire(timeout=self.admit_timeout)
+        with self._load_cond:
+            self._queued -= 1
+            if ok:
+                self._inflight += 1
+        return ok
+
+    def _finish_request(self) -> None:
+        with self._load_cond:
+            self._inflight -= 1
+            self._load_cond.notify_all()
+        self._sem.release()
+
+    def _retry_after(self) -> float:
+        """The shed response's suggested delay, scaled with queue depth so
+        a deeper backlog spreads retries further out."""
+        with self._load_cond:
+            q = self._queued
+        return round(min(1.0, 0.02 + 0.01 * q), 4)
 
     # -- lifecycle -------------------------------------------------------
 
@@ -184,14 +298,40 @@ class BasketServer:
         self._tcp.serve_forever()
 
     def close(self) -> None:
+        """Drain-then-close: stop accepting, let in-flight requests finish
+        (bounded by ``drain_timeout``), then force-close lingering
+        connections so blocked reads unblock and handler threads exit."""
         if self._closed:
             return
         self._closed = True
+        self._draining.set()
         if self._serving:
             # shutdown() blocks on an event only serve_forever() sets —
             # calling it on a bound-but-never-served server deadlocks
             self._tcp.shutdown()
         self._tcp.server_close()
+        deadline = time.monotonic() + self.drain_timeout
+        with self._load_cond:
+            while self._inflight > 0:
+                remain = deadline - time.monotonic()
+                if remain <= 0:
+                    _LOG.warning("drain timeout with %d requests in flight",
+                                 self._inflight)
+                    break
+                self._load_cond.wait(timeout=remain)
+        # idle handlers are still blocked in read_frame; yank their
+        # sockets so the threads exit instead of waiting out idle_timeout
+        with self._conn_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
         if self._thread is not None:
             self._thread.join(timeout=5)
         with self._cat_lock:

@@ -1,0 +1,654 @@
+"""repro.fault + the failure-hardened remote/storage tier (DESIGN.md §14).
+
+Covers the ISSUE-7 acceptance surface:
+
+* torn-container matrix: truncate a journaled container at every
+  structural boundary (mid-basket, mid-TOC, inside the trailer, inside
+  the header) — open raises the structured ``TruncatedContainerError``
+  and ``recover_container`` salvages exactly the baskets preceding the
+  tear, verified against the original bytes;
+* the torn-write property end-to-end: SIGKILL a writer subprocess
+  mid-save and assert readers get the old generation, the new
+  generation, or a structured recovery — never silently wrong bytes;
+* the satellite bugfixes: a mid-write failure aborts (tmp unlinked,
+  ``close()`` raises once then no-ops) instead of committing a partial
+  container; a dead peer raises typed ``RemoteTimeout`` instead of an
+  untyped hang;
+* deterministic fault plans (same seed + traffic = same faults) and the
+  chaos proxy applying them: garble / drop / reset retried to success;
+* failover (dead endpoint in the pool), hedged reads (stalled replica
+  loses the race), corrupt-basket quarantine with cross-replica
+  re-fetch, server load-shedding, idle reaping, drain-then-close;
+* every robustness path counted: ``remote.retries{reason}``,
+  ``remote.hedge{outcome}``, ``server.shed``, ``bfile.corrupt_baskets``.
+"""
+
+import json
+import os
+import shutil
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.bfile import (BasketFile, BasketWriter, CorruptBasketError,
+                              TruncatedContainerError, recover_container)
+from repro.core.codec import CompressionConfig
+from repro.fault import ChaosProxy, FaultPlan, FaultRule, parse_rule, \
+    pread_fault_hook
+from repro.io import fdcache
+from repro.remote import (BasketServer, EndpointPool, RemoteBasketFile,
+                          RemoteConnectError, RemoteTimeout, ServerBusy,
+                          TieredCache)
+from repro.remote import protocol as P
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _counter(name, **labels):
+    return obs.REGISTRY.counter(name, **labels).value
+
+
+@pytest.fixture(autouse=True)
+def _no_fault_hook():
+    """Every test starts and ends with a clean pread path."""
+    prev = fdcache.set_fault_hook(None)
+    yield
+    fdcache.set_fault_hook(prev)
+
+
+def _write_container(path, rows=3000, journal=True, algo="none", level=0):
+    """Two-branch container with deterministic content and many small
+    baskets.  ``algo='none'`` keeps payload bytes == raw bytes, so a
+    single flipped payload byte is exactly one ChecksumError (a garbled
+    *compressed* stream can fail anywhere in the codec instead)."""
+    a = np.arange(rows, dtype=np.int64)
+    b = (np.arange(rows, dtype=np.float32) * 0.5).reshape(rows)
+    cfg = CompressionConfig(algo, level)
+    w = BasketWriter(str(path), journal=journal)
+    w.write_branch("a", a, cfg, target_basket_bytes=4096)
+    w.write_branch("b", b, cfg, target_basket_bytes=4096)
+    w.close()
+    return {"a": a, "b": b}
+
+
+def _structure(path):
+    """(basket offsets+lengths per branch, toc_start, toc_len, size)."""
+    size = os.path.getsize(path)
+    with BasketFile(str(path)) as f:
+        baskets = {n: [(bb["offset"], bb["meta"]["comp_len"],
+                        bb["meta"]["entry_count"])
+                       for bb in f.branches[n]["baskets"]]
+                   for n in f.branch_names()}
+    with open(path, "rb") as fh:
+        fh.seek(-16, os.SEEK_END)
+        toc_len = int.from_bytes(fh.read(8), "little")
+    return baskets, size - 16 - toc_len, toc_len, size
+
+
+def _truncate_copy(tmp_path, src, cut, tag):
+    dst = str(tmp_path / f"torn-{tag}.bskt")
+    shutil.copyfile(src, dst)
+    shutil.copyfile(str(src) + ".journal", dst + ".journal")
+    with open(dst, "r+b") as fh:
+        fh.truncate(cut)
+    return dst
+
+
+# ---------------------------------------------------------------------------
+# torn containers: detection + recovery
+# ---------------------------------------------------------------------------
+
+def test_truncation_matrix(tmp_path):
+    src = str(tmp_path / "whole.bskt")
+    arrays = _write_container(src)
+    baskets, toc_start, toc_len, size = _structure(src)
+    n_total = len(baskets["a"]) + len(baskets["b"])
+    assert len(baskets["a"]) >= 3 and len(baskets["b"]) >= 3
+
+    cuts = {
+        "header": 5,
+        "mid-first-basket": baskets["a"][0][0] + baskets["a"][0][1] // 2,
+        "mid-later-basket": baskets["b"][1][0] + 1,
+        "mid-toc": toc_start + toc_len // 2,
+        "in-trailer": size - 8,          # magic half gone -> bad trailer
+        "no-trailer": toc_start,         # whole TOC+trailer missing
+    }
+    for tag, cut in cuts.items():
+        torn = _truncate_copy(tmp_path, src, cut, tag)
+        with pytest.raises(TruncatedContainerError):
+            BasketFile(torn)
+
+        if tag == "header":
+            with pytest.raises(TruncatedContainerError,
+                               match="nothing to salvage"):
+                recover_container(torn)
+            continue
+        rep = recover_container(torn)
+        out = rep["out_path"]
+        assert rep["baskets_kept"] + rep["baskets_lost"] == n_total
+        with BasketFile(out) as rf:
+            for name in rf.branch_names():
+                got = rf.read_branch(name)
+                np.testing.assert_array_equal(got, arrays[name][:len(got)])
+        if tag in ("mid-toc", "in-trailer", "no-trailer"):
+            # every basket precedes the tear: full salvage
+            assert rep["baskets_kept"] == n_total
+            assert rep["branches"]["a"] == len(arrays["a"])
+            assert rep["branches"]["b"] == len(arrays["b"])
+        elif tag == "mid-first-basket":
+            assert rep["branches"].get("a", 0) == 0
+        elif tag == "mid-later-basket":
+            # branch a wholly before the tear, b cut at basket 1
+            assert rep["branches"]["a"] == len(arrays["a"])
+            assert 0 < rep["branches"]["b"] < len(arrays["b"])
+
+
+def test_recover_needs_journal(tmp_path):
+    src = str(tmp_path / "nojournal.bskt")
+    _write_container(src, journal=False)
+    torn = str(tmp_path / "torn.bskt")
+    shutil.copyfile(src, torn)
+    with open(torn, "r+b") as fh:
+        fh.truncate(os.path.getsize(torn) - 20)
+    with pytest.raises(TruncatedContainerError, match="journal"):
+        BasketFile.recover(torn)
+
+
+def test_journal_is_a_sidecar_not_format(tmp_path):
+    """journal=True must not change the container bytes (golden-bytes
+    invariant: the journal is recovery metadata, never format)."""
+    p1, p2 = str(tmp_path / "j.bskt"), str(tmp_path / "nj.bskt")
+    _write_container(p1, journal=True)
+    _write_container(p2, journal=False)
+    with open(p1, "rb") as f1, open(p2, "rb") as f2:
+        assert f1.read() == f2.read()
+    assert os.path.exists(p1 + ".journal")
+    assert not os.path.exists(p2 + ".journal")
+
+
+def test_killed_writer_leaves_old_or_new_never_torn(tmp_path):
+    path = str(tmp_path / "gen.bskt")
+    v1 = np.zeros(200_000, dtype=np.int64)
+    w = BasketWriter(path, journal=True)
+    w.write_branch("a", v1, CompressionConfig("zlib", 1))
+    w.close()
+
+    script = (
+        "import sys, numpy as np\n"
+        f"sys.path.insert(0, {SRC!r})\n"
+        "from repro.core.bfile import BasketWriter\n"
+        "from repro.core.codec import CompressionConfig\n"
+        "w = BasketWriter(sys.argv[1], journal=True)\n"
+        "arr = np.arange(3_000_000, dtype=np.int64)\n"
+        "w.write_branch('a', arr, CompressionConfig('zlib', 6),\n"
+        "               target_basket_bytes=64 * 1024)\n"
+        "w.close()\n")
+    proc = subprocess.Popen([sys.executable, "-c", script, path])
+    time.sleep(0.15)
+    proc.send_signal(signal.SIGKILL)
+    proc.wait()
+
+    # the committed path is always openable: old generation or new
+    with BasketFile(path) as f:
+        got = f.read_branch("a")
+    v2 = np.arange(3_000_000, dtype=np.int64)
+    assert (got.size == v1.size and (got == v1).all()) \
+        or (got.size == v2.size and (got == v2).all())
+
+    # a leftover tmp is salvageable up to the tear (or structurally empty)
+    tmp = path + ".tmp"
+    if os.path.exists(tmp) and os.path.getsize(tmp) > 8:
+        rep = recover_container(tmp, str(tmp_path / "salvaged.bskt"))
+        rows = rep["branches"].get("a", 0)
+        if rows:
+            with BasketFile(rep["out_path"]) as f:
+                np.testing.assert_array_equal(f.read_branch("a"), v2[:rows])
+
+
+# ---------------------------------------------------------------------------
+# satellite: mid-write failure aborts instead of committing
+# ---------------------------------------------------------------------------
+
+def test_failed_write_aborts_and_close_is_idempotent(tmp_path):
+    path = str(tmp_path / "fail.bskt")
+
+    def chunks():
+        yield (0, 512, np.arange(512, dtype=np.int64))
+        raise RuntimeError("producer died")
+
+    w = BasketWriter(path, journal=True)
+    with pytest.raises(RuntimeError, match="producer died"):
+        w.write_branch_chunks("a", dtype="<i8", shape=[1024],
+                              chunks=chunks())
+    with pytest.raises(RuntimeError, match="failed mid-stream"):
+        w.close()
+    # aborted: no tmp, no committed file, no stale journal; close no-ops
+    assert not os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+    assert not os.path.exists(path + ".journal")
+    w.close()
+    w.abort()
+
+
+def test_context_manager_aborts_on_exception(tmp_path):
+    path = str(tmp_path / "ctx.bskt")
+    with pytest.raises(ValueError, match="boom"):
+        with BasketWriter(path) as w:
+            w.write_branch("a", np.arange(64, dtype=np.int64))
+            raise ValueError("boom")
+    assert not os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+
+
+# ---------------------------------------------------------------------------
+# local corruption: structured quarantine
+# ---------------------------------------------------------------------------
+
+def test_local_corrupt_basket_error_is_structured(tmp_path):
+    path = str(tmp_path / "c.bskt")
+    _write_container(path)
+    before = _counter("bfile.corrupt_baskets")
+    fdcache.set_fault_hook(pread_fault_hook(match="c.bskt", kind="garble"))
+    with BasketFile(path) as f:
+        with pytest.raises(CorruptBasketError) as ei:
+            f.read_branch("a")
+    e = ei.value
+    assert e.branch == "a" and e.index >= 0 and e.offset >= 8
+    assert e.path.endswith("c.bskt")
+    assert "branch='a'" in str(e)
+    assert _counter("bfile.corrupt_baskets") > before
+    fdcache.set_fault_hook(None)
+    with BasketFile(path) as f:        # undamaged underneath: reads fine
+        assert f.read_branch("a")[-1] == 2999
+
+
+def test_pread_short_hook_raises_eof(tmp_path):
+    path = str(tmp_path / "s.bskt")
+    _write_container(path)
+    fdcache.set_fault_hook(pread_fault_hook(match="s.bskt", kind="short",
+                                            max_fires=1))
+    with BasketFile(path) as f:
+        with pytest.raises(EOFError):
+            f.read_basket_payload("a", 0)
+
+
+# ---------------------------------------------------------------------------
+# fault plans: determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic():
+    rules = [FaultRule("garble", p=0.3, direction="s2c")]
+    runs = []
+    for _ in range(2):
+        plan = FaultPlan(rules, seed=42)
+        runs.append([bool(plan.decide(conn_id=0, direction="s2c",
+                                      frame_no=i)) for i in range(200)])
+    assert runs[0] == runs[1]
+    n = sum(runs[0])
+    assert 20 < n < 100                 # p=0.3 over 200 frames
+    other = FaultPlan(rules, seed=43)
+    assert [bool(other.decide(conn_id=0, direction="s2c", frame_no=i))
+            for i in range(200)] != runs[0]
+
+
+def test_fault_plan_triggers():
+    plan = FaultPlan([FaultRule("drop", verb="readv", direction="c2s",
+                                every=3, max_fires=2)], seed=0)
+    fired = [bool(plan.decide(conn_id=1, direction="c2s", verb="readv",
+                              frame_no=i)) for i in range(1, 13)]
+    assert fired == [False, False, True, False, False, True,
+                     False, False, False, False, False, False]
+    assert plan.counts() == {"drop": 2}
+    assert not plan.decide(conn_id=1, direction="s2c", verb="readv",
+                           frame_no=3)
+    assert not plan.decide(conn_id=1, direction="c2s", verb="ping",
+                           frame_no=3)
+
+
+def test_parse_rule():
+    r = parse_rule("delay:verb=readv,ms=100,p=0.5,dir=s2c,max=3")
+    assert r.kind == "delay" and r.verb == "readv"
+    assert r.delay_s == pytest.approx(0.1) and r.p == 0.5
+    assert r.direction == "s2c" and r.max_fires == 3
+    assert parse_rule("reset").kind == "reset"
+    with pytest.raises(ValueError):
+        parse_rule("explode")
+    with pytest.raises(ValueError):
+        parse_rule("drop:banana=1")
+
+
+# ---------------------------------------------------------------------------
+# client failure semantics
+# ---------------------------------------------------------------------------
+
+def _dead_port():
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def test_dead_peer_raises_typed_timeout():
+    """Satellite bugfix: a peer that accepts and never answers used to
+    hang the client in an untyped blocking recv."""
+    lsock = socket.socket()
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+    held = []
+    t = threading.Thread(
+        target=lambda: held.append(lsock.accept()[0]), daemon=True)
+    t.start()
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(RemoteTimeout):
+            RemoteBasketFile(host="127.0.0.1",
+                             port=lsock.getsockname()[1],
+                             path="x.bskt", timeout=0.3, retries=0)
+        assert time.monotonic() - t0 < 3.0
+    finally:
+        lsock.close()
+        for s in held:
+            s.close()
+
+
+def test_unreachable_raises_connect_error():
+    with pytest.raises(RemoteConnectError):
+        RemoteBasketFile(host="127.0.0.1", port=_dead_port(),
+                         path="x.bskt", timeout=0.5, retries=0)
+
+
+def test_endpoint_pool_rotation_and_cooldown():
+    pool = EndpointPool(["h1:1", "h2:2", "h3:3"], cooldown=30.0)
+    assert [pool.pick() for _ in range(3)] == \
+        [("h1", 1), ("h2", 2), ("h3", 3)]
+    pool.report(("h2", 2), ok=False)
+    picks = [pool.pick() for _ in range(4)]
+    assert ("h2", 2) not in picks          # cooled down, skipped
+    assert ("h2", 2) == pool.pick(exclude={("h1", 1), ("h3", 3)})
+    pool.report(("h2", 2), ok=True)
+    assert ("h2", 2) in [pool.pick() for _ in range(3)]
+    assert len(pool.healthy()) == 3
+
+
+def test_pool_failover_dead_replica(tmp_path):
+    _write_container(str(tmp_path / "d.bskt"))
+    with BasketServer(str(tmp_path), workers=0) as srv:
+        srv.start()
+        before = _counter("remote.retries", reason="connect")
+        with RemoteBasketFile(
+                path="d.bskt",
+                endpoints=[("127.0.0.1", _dead_port()),
+                           (srv.host, srv.port)],
+                timeout=1.0, retries=3, backoff=0.01) as rf:
+            got = rf.read_branch("a")
+        assert got[-1] == 2999
+        assert _counter("remote.retries", reason="connect") > before
+
+
+# ---------------------------------------------------------------------------
+# chaos proxy: injected wire faults retried to success
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def chaos_env(tmp_path):
+    arrays = _write_container(str(tmp_path / "x.bskt"))
+    with BasketServer(str(tmp_path), workers=0) as srv:
+        srv.start()
+        yield {"dir": tmp_path, "server": srv, "arrays": arrays}
+
+
+def _via_proxy(env, plan, **kw):
+    proxy = ChaosProxy(env["server"].host, env["server"].port, plan)
+    rf = RemoteBasketFile(host=proxy.host, port=proxy.port, path="x.bskt",
+                          wire=None, timeout=1.0, retries=4,
+                          backoff=0.01, **kw)
+    return proxy, rf
+
+
+@pytest.mark.parametrize("rule,reason", [
+    (FaultRule("garble", direction="s2c", verb="readv", max_fires=1),
+     "frame"),
+    (FaultRule("drop", direction="s2c", verb="readv", max_fires=1),
+     "timeout"),
+    (FaultRule("reset", direction="c2s", verb="readv", max_fires=1),
+     None),
+    (FaultRule("short", direction="s2c", verb="readv", max_fires=1),
+     None),
+])
+def test_chaos_fault_retried_to_success(chaos_env, rule, reason):
+    plan = FaultPlan([rule], seed=7)
+    before = _counter("remote.retries", reason=reason) if reason else None
+    proxy, rf = _via_proxy(chaos_env, plan)
+    try:
+        with rf:
+            np.testing.assert_array_equal(rf.read_branch("a"),
+                                          chaos_env["arrays"]["a"])
+        assert plan.counts().get(rule.kind) == 1   # the fault did happen
+        if reason:
+            assert _counter("remote.retries", reason=reason) > before
+    finally:
+        proxy.close()
+
+
+def test_chaos_delay_is_survivable(chaos_env):
+    plan = FaultPlan([FaultRule("delay", direction="s2c", verb="readv",
+                                delay_s=0.2, every=2)], seed=1)
+    proxy, rf = _via_proxy(chaos_env, plan)
+    try:
+        with rf:
+            np.testing.assert_array_equal(rf.read_branch("b"),
+                                          chaos_env["arrays"]["b"])
+        assert plan.counts().get("delay", 0) >= 1
+    finally:
+        proxy.close()
+
+
+# ---------------------------------------------------------------------------
+# hedged reads
+# ---------------------------------------------------------------------------
+
+def test_hedge_beats_stalled_replica(chaos_env):
+    env = chaos_env
+    plan = FaultPlan([FaultRule("delay", direction="s2c", verb="readv",
+                                delay_s=0.4)], seed=3)
+    proxy = ChaosProxy(env["server"].host, env["server"].port, plan)
+    wins_before = _counter("remote.hedge", outcome="win")
+    try:
+        with RemoteBasketFile(
+                path="x.bskt",
+                endpoints=[(proxy.host, proxy.port),
+                           (env["server"].host, env["server"].port)],
+                wire=None, timeout=5.0, retries=2, backoff=0.01,
+                hedge=0.05) as rf:
+            t0 = time.monotonic()
+            got = rf.read_branch("a")
+            dt = time.monotonic() - t0
+        np.testing.assert_array_equal(got, env["arrays"]["a"])
+        assert _counter("remote.hedge", outcome="win") > wins_before
+        # without hedging every batch would eat the full 0.4s stall
+        assert dt < 0.4 * 2
+    finally:
+        proxy.close()
+
+
+# ---------------------------------------------------------------------------
+# corrupt-basket quarantine: cross-replica re-fetch
+# ---------------------------------------------------------------------------
+
+def test_remote_corruption_refetched_from_replica(tmp_path):
+    dir_a, dir_b = tmp_path / "ra", tmp_path / "rb"
+    dir_a.mkdir(), dir_b.mkdir()
+    arrays = _write_container(str(dir_a / "r.bskt"))
+    shutil.copyfile(str(dir_a / "r.bskt"), str(dir_b / "r.bskt"))
+    # replica A's disk is rotting: every basket pread garbled
+    fdcache.set_fault_hook(pread_fault_hook(match=str(dir_a), kind="garble"))
+    before = _counter("remote.retries", reason="corrupt")
+    with BasketServer(str(dir_a), workers=0) as sa, \
+            BasketServer(str(dir_b), workers=0) as sb:
+        sa.start(), sb.start()
+        with RemoteBasketFile(
+                path="r.bskt",
+                endpoints=[(sa.host, sa.port), (sb.host, sb.port)],
+                wire=None, timeout=2.0, retries=2, backoff=0.01,
+                cache=TieredCache(mem_bytes=1 << 20)) as rf:
+            np.testing.assert_array_equal(rf.read_branch("a"), arrays["a"])
+            np.testing.assert_array_equal(
+                rf.read_entries("b", 10, 50), arrays["b"][10:50])
+    assert _counter("remote.retries", reason="corrupt") > before
+
+
+def test_all_replicas_corrupt_raises_structured(tmp_path):
+    _write_container(str(tmp_path / "r2.bskt"))
+    fdcache.set_fault_hook(pread_fault_hook(match=str(tmp_path),
+                                            kind="garble"))
+    with BasketServer(str(tmp_path), workers=0) as srv:
+        srv.start()
+        with RemoteBasketFile(host=srv.host, port=srv.port, path="r2.bskt",
+                              wire=None, timeout=2.0, retries=1,
+                              backoff=0.01) as rf:
+            with pytest.raises(CorruptBasketError) as ei:
+                rf.read_basket_raw("a", 2)
+    assert ei.value.branch == "a" and ei.value.index == 2
+
+
+def test_tiered_cache_drop():
+    c = TieredCache(mem_bytes=1 << 20)
+    c.put_decoded(("k",), b"xyz")
+    assert c.get_decoded(("k",)) == b"xyz"
+    c.drop(("k",))
+    assert c.get_decoded(("k",)) is None
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# server degradation: shed, idle reap, drain
+# ---------------------------------------------------------------------------
+
+def _raw_conn(srv, timeout=5.0):
+    s = socket.create_connection((srv.host, srv.port), timeout=timeout)
+    return s, s.makefile("rb", buffering=0)
+
+
+def test_server_sheds_when_saturated(tmp_path):
+    _write_container(str(tmp_path / "l.bskt"))
+    # one slow pread (0.6s) pins the single execution slot
+    fdcache.set_fault_hook(pread_fault_hook(
+        match=str(tmp_path), kind="delay", delay_s=0.6, max_fires=1))
+    shed_before = _counter("server.shed")
+    with BasketServer(str(tmp_path), workers=0, max_inflight=1,
+                      admit_queue=0) as srv:
+        srv.start()
+        body = {"path": "l.bskt", "generation": None,
+                "baskets": [["a", 0]], "wire": None}
+        s1, r1 = _raw_conn(srv)
+        s2, r2 = _raw_conn(srv)
+        try:
+            s1.sendall(P.pack_frame(P.REQ_READV, body))
+            time.sleep(0.2)            # s1 is now inside the slow pread
+            s2.sendall(P.pack_frame(P.REQ_READV, body))
+            ftype, b2, _ = P.read_frame(r2)
+            assert ftype == P.RESP_BUSY
+            assert b2["error"] == "busy" and b2["retry_after_s"] > 0
+            ftype, _, _ = P.read_frame(r1)     # slot holder still answers
+            assert ftype == P.RESP_READV
+            # shed client retries after the suggested delay and succeeds
+            s2.sendall(P.pack_frame(P.REQ_READV, body))
+            ftype, _, _ = P.read_frame(r2)
+            assert ftype == P.RESP_READV
+        finally:
+            s1.close(), s2.close()
+    assert _counter("server.shed") > shed_before
+
+
+def test_client_retries_through_shedding(tmp_path):
+    """Eight clients through a max_inflight=1 server: RESP_BUSY sheds are
+    retried (jittered, server-suggested delay) until every read lands."""
+    arrays = _write_container(str(tmp_path / "m.bskt"))
+    with BasketServer(str(tmp_path), workers=0, max_inflight=1,
+                      admit_queue=0) as srv:
+        srv.start()
+        errs = []
+
+        def worker():
+            try:
+                with RemoteBasketFile(host=srv.host, port=srv.port,
+                                      path="m.bskt", wire=None,
+                                      timeout=5.0, busy_retries=40,
+                                      backoff=0.01) as rf:
+                    np.testing.assert_array_equal(rf.read_branch("a"),
+                                                  arrays["a"])
+            except Exception as e:     # surfaced via the errs list
+                errs.append(e)
+
+        ts = [threading.Thread(target=worker) for _ in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=60)
+        assert errs == []
+
+
+def test_idle_connections_reaped(tmp_path):
+    _write_container(str(tmp_path / "i.bskt"))
+    before = _counter("server.idle_closed")
+    with BasketServer(str(tmp_path), workers=0, idle_timeout=0.3) as srv:
+        srv.start()
+        s, r = _raw_conn(srv)
+        try:
+            s.sendall(P.pack_frame(P.REQ_PING, {}))
+            assert P.read_frame(r)[0] == P.RESP_PING
+            time.sleep(0.8)            # exceed idle_timeout, then probe
+            with pytest.raises((EOFError, P.ProtocolError, OSError)):
+                P.read_frame(r)
+        finally:
+            s.close()
+    assert _counter("server.idle_closed") > before
+
+
+def test_drain_finishes_inflight_requests(tmp_path):
+    _write_container(str(tmp_path / "dr.bskt"))
+    fdcache.set_fault_hook(pread_fault_hook(
+        match=str(tmp_path), kind="delay", delay_s=0.5, max_fires=1))
+    srv = BasketServer(str(tmp_path), workers=0, drain_timeout=5.0)
+    srv.start()
+    results = []
+
+    def reader():
+        with RemoteBasketFile(host=srv.host, port=srv.port, path="dr.bskt",
+                              wire=None, timeout=5.0, retries=0) as rf:
+            results.append(rf.read_basket_raw("a", 0))
+
+    t = threading.Thread(target=reader)
+    t.start()
+    time.sleep(0.2)                    # the slow request is in flight
+    srv.close()                        # drain: must NOT cut it off
+    t.join(timeout=10)
+    assert len(results) == 1 and len(results[0]) > 0
+
+
+# ---------------------------------------------------------------------------
+# protocol: RESP_BUSY frames
+# ---------------------------------------------------------------------------
+
+def test_resp_busy_roundtrip():
+    import io
+    frame = P.pack_frame(P.RESP_BUSY, {"error": "busy",
+                                       "retry_after_s": 0.05})
+    ftype, body, payload = P.read_frame(io.BytesIO(frame))
+    assert ftype == P.RESP_BUSY
+    assert body == {"error": "busy", "retry_after_s": 0.05}
+    assert payload == b""
+
+
+def test_server_busy_error_carries_retry_after():
+    e = ServerBusy("server busy", retry_after=0.25)
+    assert e.retry_after == 0.25

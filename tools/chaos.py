@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""Stand a chaos proxy in front of a running basket server::
+
+    tools/chaos.py HOST:PORT --port 9148 \\
+        --rule garble:p=0.02,dir=s2c --rule delay:verb=readv,ms=100,p=0.5
+
+Clients point at the proxy's address instead of the server's; every RBSP
+frame in both directions passes through the seeded FaultPlan.  Rule
+syntax is ``kind[:k=v,...]`` with kinds drop/delay/reset/garble/short and
+keys p, dir (c2s/s2c), verb, every, after (bytes), ms (delay), max —
+see ``repro.fault.inject.parse_rule``.  On SIGINT the proxy prints the
+per-kind firing counts, so a soak run ends with proof of what it injected.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.fault import ChaosProxy, FaultPlan, parse_rule  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools/chaos.py",
+        description="RBSP-aware chaos TCP proxy (repro.fault).")
+    ap.add_argument("upstream", help="basket server address, HOST:PORT")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="listen port (0 = ephemeral; printed on stdout)")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="fault rule spec (repeatable): kind[:k=v,...]")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="fault plan seed (same seed + traffic = same faults)")
+    args = ap.parse_args(argv)
+
+    host, _, port = args.upstream.rpartition(":")
+    if not host or not port:
+        ap.error(f"upstream {args.upstream!r} is not HOST:PORT")
+    plan = FaultPlan([parse_rule(s) for s in args.rule], seed=args.seed)
+    proxy = ChaosProxy(host, int(port), plan,
+                       host=args.host, port=args.port)
+    print(f"chaos proxy on {proxy.host}:{proxy.port} -> {host}:{port} "
+          f"({len(plan.rules)} rules, seed={plan.seed})", flush=True)
+    try:
+        while True:
+            time.sleep(1)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        proxy.close()
+        print(f"injected: {plan.counts() or 'nothing'}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
