@@ -9,7 +9,7 @@ import numpy as np
 from repro.configs.paper_io import PAPER_IO
 from repro.data.events import make_events
 
-__all__ = ["paper_tree_bytes", "time_fn", "emit", "EVENTS"]
+__all__ = ["paper_tree_bytes", "time_fn", "emit", "write_json", "EVENTS"]
 
 EVENTS = None
 
@@ -37,6 +37,29 @@ def time_fn(fn, *args, repeat: int = 3, min_time: float = 0.05) -> float:
                 break
         best = min(best, dt / n)
     return best
+
+
+def write_json(path: str, benches: dict[str, list[dict]]) -> None:
+    """Write a BENCH-style perf-trajectory file (same schema as
+    ``benchmarks.run --json``) from one or more benches' rows — the
+    per-figure ``--json`` flag for single-bench trajectory artifacts."""
+    import json
+    import os
+    import platform
+    import sys
+
+    payload = {
+        "schema": 1,
+        "unix_time": time.time(),
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "benches": benches,
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"wrote {path} "
+          f"({sum(len(v) for v in benches.values())} rows)")
 
 
 def emit(rows: list[dict], path: str | None = None) -> None:

@@ -279,8 +279,14 @@ def main(argv=None) -> int:
                          "every injected fault (zero errors, byte "
                          "identity) and hedging beat the stalls (CI gate)")
     ap.add_argument("--out", default="artifacts/bench/fig_fault.csv")
+    ap.add_argument("--json", default="",
+                    help="also write the rows as a BENCH-style perf "
+                         "trajectory JSON (cross-PR comparison)")
     args = ap.parse_args(argv)
     rows = run(args.out, quick=args.quick)
+    if args.json:
+        from .common import write_json
+        write_json(args.json, {"fig_fault": rows})
     return check(rows) if args.check else 0
 
 

@@ -1,0 +1,314 @@
+"""Self-healing storage benchmark: parity overhead + heal soak.
+
+Three stages (DESIGN.md §15):
+
+* **write** — the same corpus written without and with a ``parity=k``
+  sidecar.  Gates: the *container* bytes are identical (the sidecar never
+  touches the format), sidecar bytes ≤ 1/k + 2% of the container, and the
+  parity write wall stays within 5% of the plain write (best-of-N).
+
+* **heal** — deterministic on-disk rot (:func:`repro.fault.rot_container`
+  with ``every = k + 1``, so every stripe keeps k - 1 intact members),
+  then a plain ``BasketFile(heal="auto")`` read.  Gates: byte identity,
+  every damaged basket healed in place, and a post-heal scrub reports the
+  container clean.
+
+* **soak** — two replica servers, *both* on rotted storage: distinct
+  stripes damaged on each, plus one double-damaged stripe on A that
+  single parity cannot heal locally.  Clients read every branch through
+  an :class:`EndpointPool`.  Gates: zero client-visible errors, byte
+  identity, ``repair.healed`` > 0; then anti-entropy
+  (:func:`repro.repair.repair_replica`) pulls A's unhealable baskets from
+  B and a final scrub of both replicas reports **zero** remaining
+  corruption.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core.bfile import BasketFile, write_arrays
+from repro.core.codec import CompressionConfig
+from repro.fault import rot_container
+from repro.io import fdcache
+from repro.remote import BasketServer, EndpointPool, RemoteBasketFile
+from repro.repair import repair_replica, scrub_container
+
+from .common import emit
+
+MB = 1 << 20
+K = 4                         # parity stripe width under test
+
+
+def _bench_dir():
+    for d in ("/dev/shm", None):
+        if d is None or (os.path.isdir(d) and os.access(d, os.W_OK)):
+            return tempfile.TemporaryDirectory(dir=d, prefix="fig_heal_")
+
+
+def _corpus(quick: bool) -> dict[str, np.ndarray]:
+    """``algo=none`` keeps payloads raw, so one garbled byte is exactly one
+    checksum failure and parity reconstruction is the only repair path."""
+    rows = 80_000 if quick else 500_000
+    rng = np.random.default_rng(17)
+    return {
+        "energy": np.cumsum(rng.integers(1, 9, rows)).astype(np.int64),
+        "pid": rng.integers(0, 100, rows).astype(np.int32),
+        "t0": rng.standard_normal(rows).astype(np.float32),
+    }
+
+
+def _write(path: str, arrays, parity: int = 0, algo: str = "none") -> None:
+    cfg = CompressionConfig(algo, 1 if algo != "none" else 0)
+    write_arrays(path, arrays, cfg_for=lambda n, a: cfg,
+                 target_basket_bytes=32 * 1024, parity=parity)
+
+
+def _row(stage, case, value, unit, wall=""):
+    return {"bench": "fig_heal", "stage": stage, "case": case,
+            "wall_s": wall, "value": value, "unit": unit}
+
+
+def _write_rows(td, quick: bool) -> list[dict]:
+    """Parity cost against a *production-shaped* write: zlib-1 compressed
+    (the paper's baseline codec) — the XOR + sidecar work must disappear
+    inside the compression wall, and the sidecar bytes inside 1/k + 2%
+    of the compressed container."""
+    rng = np.random.default_rng(29)
+    rows = 200_000 if quick else 500_000
+    arrays = {
+        "energy": np.cumsum(rng.integers(1, 9, rows)).astype(np.int64),
+        "pid": rng.integers(0, 100, rows).astype(np.int32),
+        "t0": rng.standard_normal(rows).astype(np.float32),
+    }
+    plain, par = os.path.join(td, "plain.bskt"), os.path.join(td, "par.bskt")
+    reps = 3 if quick else 5
+    t_plain = t_par = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _write(plain, arrays, parity=0, algo="zlib")
+        t_plain = min(t_plain, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _write(par, arrays, parity=K, algo="zlib")
+        t_par = min(t_par, time.perf_counter() - t0)
+    with open(plain, "rb") as f, open(par, "rb") as g:
+        identical = f.read() == g.read()
+    csize = os.path.getsize(par)
+    ssize = os.path.getsize(par + ".parity")
+    return [
+        _row("write", "container.bytes", csize, "B", round(t_plain, 4)),
+        _row("write", "container.identical",
+             "ok" if identical else "DIFFERENT", ""),
+        _row("write", "sidecar.bytes", ssize, "B"),
+        _row("write", "sidecar.overhead",
+             round(ssize / csize * 100, 2), "%"),
+        _row("write", "wall.plain", round(t_plain, 4), "s"),
+        _row("write", "wall.parity", round(t_par, 4), "s"),
+        _row("write", "wall.overhead",
+             round((t_par / t_plain - 1) * 100, 2), "%"),
+    ]
+
+
+def _heal_rows(td, arrays, quick: bool) -> list[dict]:
+    p = os.path.join(td, "heal.bskt")
+    _write(p, arrays, parity=K)
+    damaged = rot_container(p, seed=7, every=K + 1)
+    fdcache.invalidate(p)
+    t0 = time.perf_counter()
+    mismatches = 0
+    with BasketFile(p, heal="auto") as bf:
+        for name, want in arrays.items():
+            got = bf.read_branch(name)
+            if not (got == want).all():
+                mismatches += 1
+        stats = dict(bf.heal_stats)
+    wall = time.perf_counter() - t0
+    rep = scrub_container(p, heal=True, resume=False)
+    return [
+        _row("heal", "rotted", len(damaged), "baskets", round(wall, 4)),
+        _row("heal", "healed", stats["healed"], "baskets"),
+        _row("heal", "heal_failed", stats["failed"], "baskets"),
+        _row("heal", "mismatches", mismatches, "branches"),
+        _row("heal", "post_scrub.corrupt", rep["corrupt"], "baskets"),
+        _row("heal", "post_scrub.completed",
+             "ok" if rep["completed"] else "INCOMPLETE", ""),
+    ]
+
+
+def _soak_rows(td, arrays, quick: bool) -> list[dict]:
+    ra, rb = os.path.join(td, "ra"), os.path.join(td, "rb")
+    pa, pb = os.path.join(ra, "soak.bskt"), os.path.join(rb, "soak.bskt")
+    _write(pa, arrays, parity=K)
+    # replica B: identical content, its own (identical) parity write
+    _write(pb, arrays, parity=K)
+    # distinct stripes rotted on each replica (every = K + 1 keeps each
+    # stripe single-damaged = locally healable), plus one double-damaged
+    # stripe on A — global baskets 0 and 1 share stripe 0, so A cannot
+    # heal them from parity and must pull from B (anti-entropy)
+    dmg_a = rot_container(pa, seed=1, every=K + 1, phase=3)
+    dmg_b = rot_container(pb, seed=2, every=K + 1, phase=1)
+    dbl = rot_container(pa, seed=9, every=1, max_baskets=2)
+    for p in (pa, pb):
+        fdcache.invalidate(p)
+    healed0 = int(obs.snapshot().get("counters", {}).get("repair.healed", 0))
+
+    threads_n = 4 if quick else 8
+    reps = 4 if quick else 8
+    errors: list = []
+    mismatches: list = []
+    t0 = time.perf_counter()
+    with BasketServer(ra, workers=0, heal="auto",
+                      scrub_mbps=64) as srv_a, \
+            BasketServer(rb, workers=0, heal="auto",
+                         scrub_mbps=64) as srv_b:
+        srv_a.start(), srv_b.start()
+
+        def worker(wid: int):
+            try:
+                pool = EndpointPool([(srv_a.host, srv_a.port),
+                                     (srv_b.host, srv_b.port)],
+                                    cooldown=0.1)
+                for _ in range(reps):
+                    with RemoteBasketFile(
+                            path="soak.bskt", endpoints=pool, wire=None,
+                            timeout=2.0, retries=8, backoff=0.02) as rf:
+                        for name, want in arrays.items():
+                            got = rf.read_branch(name)
+                            if not (got == want).all():
+                                mismatches.append((wid, name))
+            except Exception as e:
+                errors.append((wid, repr(e)))
+
+        ts = [threading.Thread(target=worker, args=(i,))
+              for i in range(threads_n)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=300)
+
+        # anti-entropy: converge A's double-damaged stripe from B, and B
+        # from A, then prove both replicas clean on disk
+        rec_a = repair_replica(pa, "soak.bskt",
+                               [(srv_b.host, srv_b.port)])
+        rec_b = repair_replica(pb, "soak.bskt",
+                               [(srv_a.host, srv_a.port)])
+    wall = time.perf_counter() - t0
+    healed = int(obs.snapshot().get("counters", {}).get(
+        "repair.healed", 0)) - healed0
+    scrub_a = scrub_container(pa, heal=True, resume=False)
+    scrub_b = scrub_container(pb, heal=True, resume=False)
+    rows = [
+        _row("soak", "clients", threads_n, "threads", round(wall, 3)),
+        _row("soak", "reads", threads_n * reps * len(arrays),
+             "branch reads"),
+        _row("soak", "rotted", len(dmg_a) + len(dmg_b) + len(dbl),
+             "baskets"),
+        _row("soak", "errors", len(errors), "errors"),
+        _row("soak", "mismatches", len(mismatches), "reads"),
+        _row("soak", "repair.healed", healed, "baskets"),
+        _row("soak", "reconcile.converged",
+             "ok" if rec_a["converged"] and rec_b["converged"]
+             else "DIVERGED", ""),
+        _row("soak", "reconcile.pulled",
+             rec_a["pulled"] + rec_b["pulled"], "baskets"),
+        _row("soak", "post_scrub.corrupt",
+             scrub_a["corrupt"] + scrub_b["corrupt"], "baskets"),
+    ]
+    for wid, err in errors[:3]:
+        print(f"soak error (worker {wid}): {err}", file=sys.stderr)
+    return rows
+
+
+def run(out_csv: str | None = None, quick: bool = False) -> list[dict]:
+    with _bench_dir() as td:
+        arrays = _corpus(quick)
+        rows = _write_rows(td, quick)
+        rows += _heal_rows(td, arrays, quick)
+        rows += _soak_rows(td, arrays, quick)
+    emit(rows, out_csv)
+    return rows
+
+
+def check(rows: list[dict]) -> int:
+    """CI self-healing gate (see module docstring)."""
+    ok = True
+
+    def fail(msg):
+        nonlocal ok
+        print(f"FAIL: {msg}", file=sys.stderr)
+        ok = False
+
+    by = {(r["stage"], r["case"]): r for r in rows}
+
+    def val(stage, case):
+        r = by.get((stage, case))
+        return None if r is None else r["value"]
+
+    if val("write", "container.identical") != "ok":
+        fail("parity write changed the container bytes")
+    ov = val("write", "sidecar.overhead")
+    if ov is None or float(ov) > 100.0 / K + 2.0:
+        fail(f"parity sidecar overhead {ov}% exceeds 1/k + 2%")
+    wv = val("write", "wall.overhead")
+    if wv is None or float(wv) > 5.0:
+        fail(f"parity write wall overhead {wv}% exceeds 5%")
+    def zero(stage, case):
+        v = val(stage, case)
+        return v is not None and int(v) == 0
+
+    if val("heal", "rotted") is None or int(val("heal", "rotted")) < 1:
+        fail("heal stage injected no damage — proves nothing")
+    if val("heal", "healed") != val("heal", "rotted"):
+        fail(f"healed {val('heal', 'healed')} of "
+             f"{val('heal', 'rotted')} rotted baskets")
+    for case in ("heal_failed", "mismatches", "post_scrub.corrupt"):
+        if not zero("heal", case):
+            fail(f"heal stage {case} = {val('heal', case)}")
+    if not zero("soak", "errors"):
+        fail(f"soak had client-visible errors: {val('soak', 'errors')}")
+    if not zero("soak", "mismatches"):
+        fail("soak returned wrong bytes")
+    if val("soak", "repair.healed") is None or \
+            int(val("soak", "repair.healed")) < 1:
+        fail("soak never healed a basket in place")
+    if val("soak", "reconcile.converged") != "ok":
+        fail("anti-entropy did not converge the replicas")
+    if not zero("soak", "post_scrub.corrupt"):
+        fail(f"post-soak scrub still finds "
+             f"{val('soak', 'post_scrub.corrupt')} corrupt baskets")
+    if ok:
+        print("fig_heal check: all gates passed")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpus, fewer clients/reps")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless every rotted basket healed, "
+                         "the soak stayed error-free and byte-identical, "
+                         "and the post-soak scrub found zero corruption "
+                         "(CI gate)")
+    ap.add_argument("--out", default="artifacts/bench/fig_heal.csv")
+    ap.add_argument("--json", default="",
+                    help="also write the rows as a BENCH-style perf "
+                         "trajectory JSON (cross-PR comparison)")
+    args = ap.parse_args(argv)
+    rows = run(args.out, quick=args.quick)
+    if args.json:
+        from .common import write_json
+        write_json(args.json, {"fig_heal": rows})
+    return check(rows) if args.check else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,8 +20,9 @@ import sys
 import time
 
 from . import (fig2_survey, fig3_decompression, fig45_cfzlib, fig6_precond,
-               fig_dict, fig_entropy, fig_fault, fig_obs, fig_parallel,
-               fig_remote, fig_tune, fig_zerocopy, pipeline_tput, roofline)
+               fig_dict, fig_entropy, fig_fault, fig_heal, fig_obs,
+               fig_parallel, fig_remote, fig_tune, fig_zerocopy,
+               pipeline_tput, roofline)
 
 BENCHES = {
     "fig2": fig2_survey,
@@ -31,6 +32,7 @@ BENCHES = {
     "fig_dict": fig_dict,
     "fig_entropy": fig_entropy,
     "fig_fault": fig_fault,
+    "fig_heal": fig_heal,
     "fig_obs": fig_obs,
     "fig_parallel": fig_parallel,
     "fig_remote": fig_remote,

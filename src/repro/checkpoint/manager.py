@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import itertools
 import json
+import logging
 import os
 import threading
 import time
@@ -47,8 +48,11 @@ import numpy as np
 
 from repro import obs
 from repro.core.basket import basket_rows, split_array
-from repro.core.bfile import BasketFile, BasketWriter, _fsync_dir
+from repro.core.bfile import (BasketFile, BasketWriter, CorruptBasketError,
+                              TruncatedContainerError, _fsync_dir)
 from repro.core.policy import choose
+
+_LOG = logging.getLogger("repro.checkpoint")
 
 __all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
 
@@ -163,7 +167,7 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
                 extra_meta: Optional[dict] = None,
                 workers: int = 0, producers: int = 1,
                 staging: str = "stream", stage_depth: int = 2,
-                tuner=None, objective=None) -> dict:
+                tuner=None, objective=None, parity: int = 0) -> dict:
     """Write a pytree of (host or device) arrays as one BasketFile.
 
     ``workers>0`` compresses each tensor's baskets in parallel through the
@@ -187,7 +191,11 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     selection from the static ``profile`` heuristic to measurement-driven
     tuning (repro.tune): each tensor's config is chosen from trial
     compressions on sampled payloads, decisions persist in the file
-    header, and a manager-held tuner reuses them across steps."""
+    header, and a manager-held tuner reuses them across steps.
+
+    ``parity=k`` additionally writes a ``<path>.parity`` XOR sidecar
+    (DESIGN.md §15) so a later bit-rotted basket heals in place on
+    restore — the container bytes themselves are unchanged."""
     if staging not in ("stream", "gather"):
         raise ValueError(f"staging must be 'stream' or 'gather', got {staging!r}")
     if tuner is None and objective is not None:
@@ -224,7 +232,8 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     if producers <= 1:
         with obs.trace.span("ckpt.save", cat="ckpt", path=path,
                             branches=len(flat)), \
-                BasketWriter(path, workers=workers, tuner=tuner) as w:
+                BasketWriter(path, workers=workers, tuner=tuner,
+                             parity=parity) as w:
             unlend = lend_engine(w._engine)
             try:
                 for name in flat:
@@ -248,7 +257,8 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     lock = threading.Lock()
     with obs.trace.span("ckpt.save", cat="ckpt", path=path,
                         branches=len(flat)), \
-            BufferMerger(path, workers=workers, tuner=tuner) as m:
+            BufferMerger(path, workers=workers, tuner=tuner,
+                         parity=parity) as m:
         unlend = lend_engine(m._engine)
 
         def produce(shard):
@@ -287,7 +297,7 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
 
 
 def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
-                prefetch: int = 0):
+                prefetch: int = 0, heal: Optional[str] = None):
     """Read a BasketFile back into a pytree.
 
     ``template``: pytree whose structure/leaf-Nones define the output (leaf
@@ -297,11 +307,16 @@ def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
 
     Branches are ``device_put`` *as they decode* (when a sharding is
     given), so the host copy of each tensor is dropped immediately instead
-    of the whole host dict coexisting with the device tree."""
+    of the whole host dict coexisting with the device tree.
+
+    ``heal="auto"``: a checksum-failing basket is reconstructed in place
+    from the ``<path>.parity`` sidecar (when one exists) before the read
+    fails — the restore-side half of ``save_pytree(parity=k)``."""
     flat_s = _flatten_with_paths(shardings) if shardings is not None else {}
     t0 = time.perf_counter()
     with obs.trace.span("ckpt.load", cat="ckpt", path=path), \
-            BasketFile(path, workers=workers, prefetch=prefetch) as f:
+            BasketFile(path, workers=workers, prefetch=prefetch,
+                       heal=heal) as f:
         meta = json.loads(bytes(f.read_branch("__meta__")).decode())
         bf16 = set(meta.get("bf16", []))
 
@@ -336,13 +351,14 @@ def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, profile: str = "checkpoint",
                  workers: int = 0, producers: int = 1,
-                 tune: bool = False, objective=None):
+                 tune: bool = False, objective=None, parity: int = 0):
         self.dir = str(directory)
         os.makedirs(self.dir, exist_ok=True)
         self.keep = keep
         self.profile = profile
         self.workers = workers        # basket-parallel compression width
         self.producers = producers    # tensor-parallel producer threads (merger)
+        self.parity = int(parity)     # XOR parity sidecar stripe width (0 = off)
         # measurement-driven codec selection: one tuner lives for the
         # manager's lifetime, so step N+1 reuses step N's decisions (zero
         # re-measurement) and the drift detector spans steps
@@ -405,7 +421,8 @@ class CheckpointManager:
                                     workers=self.workers,
                                     producers=self.producers,
                                     staging="stream",
-                                    tuner=self._tuner)
+                                    tuner=self._tuner,
+                                    parity=self.parity)
                 manifest = {"step": step, "time": time.time(),
                             "wall_s": time.monotonic() - t0, **stats}
                 # atomic commit: tmp + fsync + rename + fsync dir — the
@@ -466,12 +483,37 @@ class CheckpointManager:
 
     def restore(self, step: Optional[int] = None, template=None,
                 shardings=None):
-        """Load a step (default latest).  Returns (tree, meta)."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        """Load a step (default latest).  Returns (tree, meta).
+
+        Every load opens with ``heal="auto"``, so a bit-rotted basket in a
+        ``parity=k``-saved checkpoint is first repaired in place.  With
+        ``step=None`` the manager additionally walks known steps newest →
+        oldest: a checkpoint that is torn or corrupt *beyond healing*
+        is skipped (logged, ``repair.ckpt.skipped``) and the previous
+        known-good step loads instead — a rotted latest checkpoint costs a
+        few steps of retraining, never the run.  An explicit ``step=``
+        means "this step or nothing": the heal is still attempted but the
+        failure surfaces to the caller."""
+        if step is not None:
+            return load_pytree(self._data_path(step), template, shardings,
+                               heal="auto")
+        candidates = sorted(self.steps(), reverse=True)
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        return load_pytree(self._data_path(step), template, shardings)
+        skipped: list[tuple[int, str]] = []
+        for s in candidates:
+            try:
+                return load_pytree(self._data_path(s), template, shardings,
+                                   heal="auto")
+            except (CorruptBasketError, TruncatedContainerError) as e:
+                _LOG.warning("checkpoint step %d unloadable (%s); "
+                             "falling back to previous step", s, e)
+                obs.counter("repair.ckpt.skipped").inc()
+                skipped.append((s, str(e)))
+        from repro.core.basket import ChecksumError
+        raise ChecksumError(
+            "every checkpoint in %s is corrupt beyond healing; skipped %s"
+            % (self.dir, "; ".join(f"step {s}: {m}" for s, m in skipped)))
 
     # -- retention -------------------------------------------------------
 
@@ -479,7 +521,9 @@ class CheckpointManager:
         from repro.io import fdcache
         steps = self.steps()
         for s in steps[: max(len(steps) - self.keep, 0)]:
-            for p in (self._data_path(s), self._manifest_path(s)):
+            for p in (self._data_path(s), self._manifest_path(s),
+                      self._data_path(s) + ".parity",
+                      self._data_path(s) + ".scrub"):
                 fdcache.invalidate(p)   # a cached fd would pin the inode
                 try:
                     os.remove(p)

@@ -22,8 +22,10 @@ from __future__ import annotations
 import base64
 import itertools
 import json
+import lzma
 import os
 import threading
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
@@ -31,6 +33,7 @@ import numpy as np
 
 from .basket import (BasketMeta, ChecksumError, byte_offsets, join_baskets,
                      split_array, unpack_basket, unpack_basket_into)
+from .checksum import adler32_hw
 from .codec import CompressionConfig
 
 
@@ -45,6 +48,15 @@ __all__ = ["BasketWriter", "BasketFile", "write_arrays", "read_arrays",
 
 _MAGIC = b"RBKTv001"
 _JOURNAL_MAGIC = "RBKJ1"
+
+# Everything a damaged payload can raise out of the decode path: adler /
+# shape mismatches (ValueError, incl. ChecksumError), malformed metadata
+# (KeyError), torn preads (EOFError), a garbled *compressed* stream blowing
+# up inside a codec before the adler check runs (zlib.error / LZMAError /
+# IndexError from the pure-Python LZ4 match copier).  Staleness (OSError)
+# is deliberately absent — a replaced file must never be "healed".
+_DECODE_ERRORS = (ValueError, KeyError, IndexError, EOFError,
+                  zlib.error, lzma.LZMAError)
 
 
 class CorruptBasketError(ChecksumError):
@@ -107,6 +119,14 @@ def _count_corrupt() -> None:
         pass
 
 
+def _count_repair(event: str) -> None:
+    try:
+        from repro import obs
+        obs.counter(f"repair.{event}").inc()
+    except Exception:
+        pass
+
+
 class BasketWriter:
     """Streaming writer with atomic commit.
 
@@ -124,10 +144,18 @@ class BasketWriter:
     flushed as written); :func:`recover_container` uses it to salvage
     every basket preceding a tear.  The container bytes are identical
     either way — the journal is a sidecar, never part of the format.
+
+    ``parity=k`` (k ≥ 2) additionally groups baskets, in write order,
+    into k-wide XOR stripes and writes a ``path + ".parity"`` sidecar
+    (repro.repair.stripe) committed *after* the container — any single
+    damaged basket per stripe becomes reconstructible in place
+    (``BasketFile(heal="auto")``).  Like the journal, parity never
+    changes the container's own bytes.
     """
 
     def __init__(self, path: str, workers: int = 0, engine=None,
-                 tuner=None, objective=None, journal: bool = False):
+                 tuner=None, objective=None, journal: bool = False,
+                 parity: int = 0):
         self.path = str(path)
         self._tmp = self.path + ".tmp"
         os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
@@ -149,6 +177,18 @@ class BasketWriter:
             # not describe this write's bytes
             try:
                 os.remove(self._jpath)
+            except OSError:
+                pass
+        self._parity = None
+        if parity:
+            from repro.repair.stripe import ParityWriter, parity_path
+            self._parity = ParityWriter(parity_path(self.path), k=parity)
+        else:
+            # same staleness rule as the journal: a sidecar from an
+            # earlier parity-protected generation must not describe this
+            # write's bytes
+            try:
+                os.remove(self.path + ".parity")
             except OSError:
                 pass
         self._engine = engine
@@ -218,6 +258,8 @@ class BasketWriter:
                 self._f.write(payload)  # accepts memoryview payloads zero-copy
                 if self._tuner is not None:
                     self._tuner.observe(name, meta)     # drift-detector feed
+                if self._parity is not None:
+                    self._parity.add(name, len(entry["baskets"]), payload)
                 entry["baskets"].append({"offset": off, "meta": meta.to_json()})
                 self._journal_basket(name, off, meta.to_json())
         except BaseException as e:
@@ -239,6 +281,8 @@ class BasketWriter:
             for payload, meta_json in baskets:
                 off = self._f.tell()
                 self._f.write(payload)
+                if self._parity is not None:
+                    self._parity.add(name, len(entry["baskets"]), payload)
                 entry["baskets"].append({"offset": off, "meta": dict(meta_json)})
                 self._journal_basket(name, off, dict(meta_json))
         except BaseException as e:
@@ -297,6 +341,7 @@ class BasketWriter:
             self._f.write(len(toc).to_bytes(8, "little"))
             self._f.write(_MAGIC)
             self._f.flush()
+            size = self._f.tell()
             os.fsync(self._f.fileno())
             self._f.close()
             os.replace(self._tmp, self.path)  # atomic commit
@@ -307,6 +352,13 @@ class BasketWriter:
             raise
         # the rename is durable only once the directory entry is synced
         _fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+        if self._parity is not None:
+            # sidecar commits strictly after the container: a crash here
+            # leaves a valid container without parity, never the reverse
+            from repro.repair.stripe import content_stamp
+            self._parity.commit(self._branches, content_stamp(size, toc),
+                                self.path)
+            self._parity = None
         if self._journal is not None:
             # the journal now describes the committed bytes: keep it as
             # the recovery sidecar for torn copies of this container
@@ -332,6 +384,9 @@ class BasketWriter:
                 except OSError:
                     pass
                 self._journal = None
+            if self._parity is not None:
+                self._parity.abort()
+                self._parity = None
             self._closed = True
             if self._owns_engine:
                 self._engine.close()
@@ -354,12 +409,26 @@ class BasketFile:
     routes ``read_branch``/``read_entries`` through a decompress-ahead
     :class:`repro.io.prefetch.PrefetchReader` (``prefetch`` = read-ahead
     depth in baskets) with an LRU decompressed-basket cache.
+
+    ``heal="auto"`` turns a checksum-failing or torn basket read into a
+    repair attempt instead of a quarantine dead end: the basket is
+    re-read once (transient read rot clears on retry), else reconstructed
+    from its XOR stripe peers + the ``.parity`` sidecar
+    (``BasketWriter(parity=k)``), re-verified against the stored adler32,
+    patched back **in place** (same inode — open readers stay valid), and
+    served.  Healed/transient/failed outcomes are counted in
+    ``self.heal_stats`` and the ``repair.*`` counters; an unhealable
+    basket still raises :class:`CorruptBasketError`.
     """
 
     def __init__(self, path: str, verify: bool = True,
-                 workers: int = 0, prefetch: int = 0):
+                 workers: int = 0, prefetch: int = 0,
+                 heal: Optional[str] = None):
+        if heal not in (None, "auto"):
+            raise ValueError(f"heal must be None or 'auto', got {heal!r}")
         self.path = str(path)
         self.verify = verify
+        self.heal = heal
         self.workers = workers
         self.prefetch = prefetch
         self._engine = None
@@ -395,11 +464,19 @@ class BasketFile:
                     path, f"TOC length {toc_len} inconsistent with "
                           f"file size {size}")
             f.seek(-16 - toc_len, os.SEEK_END)
+            toc_bytes = f.read(toc_len)
             try:
-                self._toc = json.loads(f.read(toc_len))
+                self._toc = json.loads(toc_bytes)
             except ValueError as e:
                 raise TruncatedContainerError(
                     path, f"undecodable TOC — torn write? ({e})") from None
+        # the content-derived stamp a parity sidecar must match before its
+        # stripe map is trusted (repro.repair.stripe.content_stamp)
+        self._content_stamp = {"size": int(size),
+                               "toc_adler": int(adler32_hw(toc_bytes))}
+        self._heal_lock = threading.Lock()
+        self._parity_sc = None
+        self.heal_stats = {"healed": 0, "transient": 0, "failed": 0}
         self.branches = self._toc["branches"]
         # per-branch autotuner decisions persisted at write time (may be
         # absent: files predating repro.tune, or written without a tuner)
@@ -430,13 +507,21 @@ class BasketFile:
         entry = self.branches[name]
         b = entry["baskets"][i]
         meta = BasketMeta.from_json(b["meta"])
-        payload = _pread(self.path, b["offset"], meta.comp_len,
-                         expect=self.generation)
         try:
+            payload = _pread(self.path, b["offset"], meta.comp_len,
+                             expect=self.generation)
             return unpack_basket(payload, meta, self._dictionary(entry),
                                  verify=self.verify)
         except ChecksumError as e:
+            if self.heal == "auto":
+                return self._heal_basket(name, i, cause=e)
             raise self._quarantine(name, i, b, e) from e
+        except _DECODE_ERRORS as e:
+            # torn pread / undecodable payload — healable damage too, but
+            # staleness (the file was replaced) must never be "healed"
+            if self.heal == "auto":
+                return self._heal_basket(name, i, cause=e)
+            raise
 
     def read_basket_into(self, name: str, i: int, out) -> int:
         """Read + decode basket ``i`` directly into ``out`` (writable
@@ -444,14 +529,24 @@ class BasketFile:
         entry = self.branches[name]
         b = entry["baskets"][i]
         meta = BasketMeta.from_json(b["meta"])
-        payload = _pread(self.path, b["offset"], meta.comp_len,
-                         expect=self.generation)
         try:
+            payload = _pread(self.path, b["offset"], meta.comp_len,
+                             expect=self.generation)
             return unpack_basket_into(payload, meta, out,
                                       self._dictionary(entry),
                                       verify=self.verify)
         except ChecksumError as e:
+            if self.heal == "auto":
+                raw = self._heal_basket(name, i, cause=e)
+                memoryview(out).cast("B")[:len(raw)] = raw
+                return len(raw)
             raise self._quarantine(name, i, b, e) from e
+        except _DECODE_ERRORS as e:
+            if self.heal == "auto":
+                raw = self._heal_basket(name, i, cause=e)
+                memoryview(out).cast("B")[:len(raw)] = raw
+                return len(raw)
+            raise
 
     def _quarantine(self, name: str, i: int, b: dict,
                     cause) -> CorruptBasketError:
@@ -460,6 +555,125 @@ class BasketFile:
         _count_corrupt()
         return CorruptBasketError(self.path, name, i, int(b["offset"]),
                                   cause=cause)
+
+    # -- self-healing (repro.repair) -------------------------------------
+
+    def _sidecar(self):
+        """The parity sidecar, loaded once and stamp-checked against this
+        container's committed content — a sidecar left over from an older
+        generation must never donate stripes to these bytes."""
+        if self._parity_sc is None:
+            from repro.repair.stripe import ParityError, ParitySidecar, \
+                parity_path
+            sc = ParitySidecar.load(parity_path(self.path))
+            if sc.stamp != self._content_stamp:
+                raise ParityError(
+                    f"{sc.path}: stamp {sc.stamp} does not match container "
+                    f"content {self._content_stamp} — sidecar is for a "
+                    "different generation")
+            self._parity_sc = sc
+        return self._parity_sc
+
+    def _try_decode(self, name: str, i: int):
+        """One pread + verified decode; ``None`` on any damage (a torn or
+        rotted read), raising only for staleness."""
+        from repro.io.fdcache import StaleFileError
+        entry = self.branches[name]
+        b = entry["baskets"][i]
+        meta = BasketMeta.from_json(b["meta"])
+        try:
+            payload = _pread(self.path, b["offset"], meta.comp_len,
+                             expect=self.generation)
+            raw = unpack_basket(payload, meta, self._dictionary(entry),
+                                verify=True)
+            return payload, raw
+        except StaleFileError:
+            raise
+        except _DECODE_ERRORS:
+            return None
+
+    def _read_peer(self, name: str, i: int) -> bytes:
+        b = self.branches[name]["baskets"][i]
+        return _pread(self.path, b["offset"], b["meta"]["comp_len"],
+                      expect=self.generation)
+
+    def _verify_peer(self, name: str, i: int, payload) -> bool:
+        entry = self.branches[name]
+        meta = BasketMeta.from_json(entry["baskets"][i]["meta"])
+        try:
+            unpack_basket(payload, meta, self._dictionary(entry),
+                          verify=True)
+            return True
+        except _DECODE_ERRORS:
+            return False
+
+    def _heal_basket(self, name: str, i: int, cause=None) -> bytes:
+        """Repair basket ``(name, i)`` and return its decoded raw bytes.
+
+        Under the heal lock: (1) one verified re-read — transient read rot
+        (a fault-hook garble, a racing heal by another thread) clears
+        without touching parity; (2) reconstruct the on-disk payload from
+        stripe peers + parity, decode-verify it against the stored
+        adler32, and patch it back in place (same inode, so open readers
+        and cache generations stay valid).  Reconstruction is retried a
+        few times because the *reads* it depends on go through the same
+        rot-prone pread path as the basket that failed.  Unhealable →
+        ``repair.heal_failed`` + :class:`CorruptBasketError`."""
+        from repro.repair.stripe import ParityError
+        entry = self.branches[name]
+        b = entry["baskets"][i]
+        meta = BasketMeta.from_json(b["meta"])
+        with self._heal_lock:
+            got = self._try_decode(name, i)
+            if got is not None:
+                self.heal_stats["transient"] += 1
+                _count_repair("transient")
+                return got[1]
+            candidate = raw = None
+            last = None
+            for _attempt in range(3):
+                try:
+                    sc = self._sidecar()
+                    candidate = sc.reconstruct(
+                        name, i, meta.comp_len,
+                        self._read_peer, self._verify_peer)
+                    raw = unpack_basket(candidate, meta,
+                                        self._dictionary(entry), verify=True)
+                    break
+                except (ParityError,) + _DECODE_ERRORS as e:
+                    last, candidate = e, None
+            if candidate is None:
+                self.heal_stats["failed"] += 1
+                _count_repair("heal_failed")
+                raise self._quarantine(name, i, b, cause or last)
+            from repro.io import fdcache
+            fdcache.patch(self.path, int(b["offset"]), candidate,
+                          expect=self.generation)
+            self.heal_stats["healed"] += 1
+            _count_repair("healed")
+            return raw
+
+    def ensure_payload(self, name: str, i: int, payload=None) -> bytes:
+        """Verified on-disk payload bytes for basket ``(name, i)``, healing
+        in place when damaged — the serve-path hook (remote server, scrub).
+
+        ``payload``, when given, is a candidate slice the caller already
+        read; it is returned as-is if it decode-verifies.  Otherwise the
+        basket is healed (:meth:`_heal_basket`) and re-read.  Raises
+        :class:`CorruptBasketError` when unhealable."""
+        entry = self.branches[name]
+        b = entry["baskets"][i]
+        meta = BasketMeta.from_json(b["meta"])
+        if payload is not None and self._verify_peer(name, i, payload):
+            return bytes(payload)
+        self._heal_basket(name, i)
+        last = None
+        for _attempt in range(4):
+            got = self._try_decode(name, i)
+            if got is not None:
+                return got[0]
+        raise self._quarantine(name, i, b, last or "post-heal re-read "
+                               "keeps failing")
 
     def _reader(self, name: str):
         """Cached PrefetchReader per branch (engine shared across them);
@@ -617,41 +831,63 @@ def recover_container(path: str, out_path: Optional[str] = None) -> dict:
             raise TruncatedContainerError(
                 path, "sheared inside the header — nothing to salvage")
         raise ValueError(f"{path}: not a BasketFile (bad magic)")
-    if not os.path.exists(jpath):
-        raise TruncatedContainerError(
-            path, "cannot recover: no write journal sidecar "
-                  f"({jpath} missing) — basket boundaries were lost with "
-                  "the TOC; write with BasketWriter(journal=True) to make "
-                  "containers salvageable")
-
-    # parse the journal: branch descriptors + basket records, in order
+    # basket boundaries: the write journal when present, else the parity
+    # sidecar's TOC mirror (BasketWriter(parity=k)) — either way, every
+    # candidate basket is decode-verified below, so a stale boundary
+    # source can drop baskets but never resurrect wrong bytes
     order: list[str] = []
     jbranches: dict[str, dict] = {}
-    with open(jpath) as jf:
-        first = jf.readline()
-        try:
-            if json.loads(first).get("magic") != _JOURNAL_MAGIC:
-                raise ValueError("bad journal magic")
-        except ValueError as e:
-            raise TruncatedContainerError(
-                path, f"unusable write journal {jpath}: {e}") from None
-        for line in jf:
-            line = line.strip()
-            if not line:
-                continue
+    if os.path.exists(jpath):
+        with open(jpath) as jf:
+            first = jf.readline()
             try:
-                rec = json.loads(line)
-            except ValueError:
-                break                # journal itself torn: keep what parsed
-            if "branch" in rec:
-                order.append(rec["branch"])
-                jbranches[rec["branch"]] = {
-                    "dtype": rec["dtype"], "shape": rec["shape"],
-                    "config": rec["config"],
-                    "dictionary": rec["dictionary"], "baskets": []}
-            elif "basket" in rec and rec["basket"] in jbranches:
-                jbranches[rec["basket"]]["baskets"].append(
-                    {"offset": int(rec["offset"]), "meta": rec["meta"]})
+                if json.loads(first).get("magic") != _JOURNAL_MAGIC:
+                    raise ValueError("bad journal magic")
+            except ValueError as e:
+                raise TruncatedContainerError(
+                    path, f"unusable write journal {jpath}: {e}") from None
+            for line in jf:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except ValueError:
+                    break            # journal itself torn: keep what parsed
+                if "branch" in rec:
+                    order.append(rec["branch"])
+                    jbranches[rec["branch"]] = {
+                        "dtype": rec["dtype"], "shape": rec["shape"],
+                        "config": rec["config"],
+                        "dictionary": rec["dictionary"], "baskets": []}
+                elif "basket" in rec and rec["basket"] in jbranches:
+                    jbranches[rec["basket"]]["baskets"].append(
+                        {"offset": int(rec["offset"]), "meta": rec["meta"]})
+    else:
+        from repro.repair.stripe import ParityError, ParitySidecar, \
+            parity_path
+        ppath = parity_path(path)
+        try:
+            sc = ParitySidecar.load(ppath)
+        except ParityError:
+            raise TruncatedContainerError(
+                path, "cannot recover: no write journal sidecar "
+                      f"({jpath} missing) and no parity sidecar "
+                      f"({ppath}) — basket boundaries were lost with the "
+                      "TOC; write with BasketWriter(journal=True) or "
+                      "BasketWriter(parity=k) to make containers "
+                      "salvageable") from None
+        # no stamp check: a torn copy never matches the committed stamp —
+        # that is exactly the case being recovered
+        for bname, e in sc.branches.items():
+            order.append(bname)
+            jbranches[bname] = {
+                "dtype": e["dtype"], "shape": list(e["shape"]),
+                "config": dict(e["config"]),
+                "dictionary": e.get("dictionary"),
+                "baskets": [{"offset": int(b["offset"]),
+                             "meta": dict(b["meta"])}
+                            for b in e["baskets"]]}
 
     kept = lost = 0
     out_branches: dict[str, dict] = {}
@@ -735,14 +971,16 @@ def recover_container(path: str, out_path: Optional[str] = None) -> dict:
 def write_arrays(path: str, arrays: dict[str, np.ndarray],
                  cfg_for: Optional[callable] = None,
                  target_basket_bytes: int = 1 << 20,
-                 workers: int = 0, tuner=None, objective=None) -> None:
+                 workers: int = 0, tuner=None, objective=None,
+                 parity: int = 0) -> None:
     """Write a flat dict of named arrays; ``cfg_for(name, arr)`` picks the
     per-branch CompressionConfig (the codec policy hook); ``workers>0``
     compresses baskets in parallel (identical bytes).  ``tuner=`` /
     ``objective=`` switch branches without an explicit config to
-    measurement-driven selection (repro.tune)."""
+    measurement-driven selection (repro.tune).  ``parity=k`` writes the
+    self-healing XOR sidecar (container bytes unchanged)."""
     with BasketWriter(path, workers=workers, tuner=tuner,
-                      objective=objective) as w:
+                      objective=objective, parity=parity) as w:
         for name, arr in arrays.items():
             cfg = cfg_for(name, np.asarray(arr)) if cfg_for else None
             w.write_branch(name, arr, cfg, target_basket_bytes)

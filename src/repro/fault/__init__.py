@@ -15,13 +15,18 @@ those failures *reproducibly*:
 * :func:`pread_fault_hook` — the local-storage analogue: a hook for
   ``repro.io.fdcache.set_fault_hook`` that garbles, truncates, or delays
   basket preads underneath a live server or local reader.
+* :func:`rot_container` — persistent bit-rot: deterministically garble
+  every Nth basket of a container *on disk* (TOC walk + ``pwrite``), the
+  damage the self-healing tier (DESIGN.md §15) exists to repair.  With
+  parity width ``k``, ``every >= k + 1`` keeps every stripe healable.
 
 ``tools/chaos.py`` is the CLI: stand a chaos proxy in front of any
 running basket server and point clients at it.
 """
 
-from .inject import FaultPlan, FaultRule, parse_rule, pread_fault_hook
+from .inject import (FaultPlan, FaultRule, parse_rule, pread_fault_hook,
+                     rot_container)
 from .proxy import ChaosProxy
 
 __all__ = ["FaultPlan", "FaultRule", "parse_rule", "pread_fault_hook",
-           "ChaosProxy"]
+           "rot_container", "ChaosProxy"]

@@ -30,12 +30,14 @@ firings, plan-wide per rule).
 from __future__ import annotations
 
 import hashlib
+import os
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
-__all__ = ["FaultRule", "FaultPlan", "parse_rule", "pread_fault_hook"]
+__all__ = ["FaultRule", "FaultPlan", "parse_rule", "pread_fault_hook",
+           "rot_container"]
 
 KINDS = ("drop", "delay", "reset", "garble", "short")
 
@@ -173,6 +175,51 @@ def garble_byte(buf: bytes, seed: int, tag: int = 0,
     out = bytearray(buf)
     out[i] ^= 0x5A
     return bytes(out)
+
+
+def rot_container(path: str, *, seed: int = 0, every: int = 3,
+                  phase: int = 0,
+                  max_baskets: Optional[int] = None) -> list[tuple[str, int]]:
+    """Deterministically rot a container *on disk* — bit-rot you can
+    reproduce.  Walks the TOC in container *write order* (ascending file
+    offset) and garbles one payload byte (:func:`garble_byte`, via
+    ``os.pwrite``) of every ``every``-th basket, starting at position
+    ``phase``; returns the damaged ``(branch, index)`` list.
+
+    With a parity sidecar of stripe width ``k`` the stripes are k-wide
+    runs of *consecutive* baskets in write order — the same walk order —
+    so ``every >= k + 1`` guarantees at most one damaged member per
+    stripe: every hit healable from single parity.  Different ``seed``/
+    ``phase`` per replica rots *different* baskets, the setup anti-entropy
+    repair converges.  ``max_baskets`` bounds the total damage."""
+    from repro.core.bfile import BasketFile
+    if every < 1:
+        raise ValueError(f"every must be >= 1, got {every}")
+    with BasketFile(path, verify=False) as bf:
+        order = sorted(
+            ((int(b["offset"]), name, i, int(b["meta"]["comp_len"]))
+             for name in bf.branch_names()
+             for i, b in enumerate(bf.branches[name]["baskets"])))
+        plan = [(name, i, off, ln)
+                for n, (off, name, i, ln) in enumerate(order)
+                if n % every == phase % every]
+    if max_baskets is not None:
+        plan = plan[:max_baskets]
+    damaged = []
+    fd = os.open(path, os.O_RDWR)
+    try:
+        for name, i, off, ln in plan:
+            buf = os.pread(fd, ln, off)
+            bad = garble_byte(buf, seed, tag=off)
+            if bad == buf:          # zero-length payload: nothing to flip
+                continue
+            j = next(k for k in range(len(buf)) if buf[k] != bad[k])
+            os.pwrite(fd, bad[j:j + 1], off + j)
+            damaged.append((name, i))
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+    return damaged
 
 
 def pread_fault_hook(*, match: Optional[str] = None, kind: str = "garble",

@@ -30,8 +30,8 @@ import os
 import threading
 from collections import OrderedDict
 
-__all__ = ["pread", "generation", "invalidate", "clear", "StaleFileError",
-           "set_fault_hook"]
+__all__ = ["pread", "patch", "generation", "invalidate", "clear",
+           "StaleFileError", "set_fault_hook"]
 
 
 class StaleFileError(OSError):
@@ -147,6 +147,37 @@ def pread(path: str, offset: int, n: int, expect: tuple | None = None) -> bytes:
     if len(buf) != n:
         raise EOFError(f"{path}: short read at {offset}: {len(buf)} < {n}")
     return buf
+
+
+def patch(path: str, offset: int, data: bytes,
+          expect: tuple | None = None) -> None:
+    """Overwrite ``len(data)`` bytes at ``offset`` **in place** — the
+    repair primitive (repro.repair heals a rotted basket by writing the
+    reconstructed payload back over the damage).
+
+    In-place on purpose: a tmp-then-replace rewrite would change the
+    inode and stale every open reader/cache generation, while an in-place
+    patch restores the *original* bytes of the same generation — readers
+    that captured the inode keep being right.  The write goes through a
+    short-lived O_RDWR fd (the cached read fd stays O_RDONLY) and is
+    fsynced before returning.  ``expect`` gives the same staleness guard
+    as :func:`pread`."""
+    fd = os.open(path, os.O_RDWR)
+    try:
+        st = os.fstat(fd)
+        if expect is not None and tuple(expect) != (st.st_dev, st.st_ino):
+            raise StaleFileError(
+                f"{path}: file was replaced (generation "
+                f"{(st.st_dev, st.st_ino)} != expected {tuple(expect)})")
+        view = memoryview(data)
+        pos = offset
+        while view:
+            n = os.pwrite(fd, view, pos)
+            pos += n
+            view = view[n:]
+        os.fsync(fd)
+    finally:
+        _close_quietly(fd)
 
 
 def generation(path: str) -> tuple[int, int]:

@@ -121,7 +121,7 @@ class BufferMerger:
 
     def __init__(self, path: str, workers: int = 0,
                  engine: Optional[CompressionEngine] = None,
-                 tuner=None, objective=None):
+                 tuner=None, objective=None, parity: int = 0):
         self._engine = engine
         self._owns_engine = False
         if engine is None and workers:
@@ -134,7 +134,7 @@ class BufferMerger:
         # the writer carries the tuner so merged branches' decisions
         # persist in the output TOC (Tuner.config_for is thread-safe —
         # producers tune concurrently, per-branch decisions serialize)
-        self._writer = BasketWriter(path, tuner=tuner)
+        self._writer = BasketWriter(path, tuner=tuner, parity=parity)
         self._lock = threading.Lock()
 
     def buffer(self) -> BasketBuffer:

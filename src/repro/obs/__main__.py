@@ -96,6 +96,22 @@ def fault_rows(counters: dict, prev: dict) -> list[tuple[str, int, int]]:
     return rows
 
 
+def repair_rows(counters: dict, prev: dict) -> list[tuple[str, int, int]]:
+    """Self-healing activity (DESIGN.md §15) as ``(label, delta, total)``
+    rows — every counter under the ``repair.`` prefix: in-place heals,
+    transient re-read saves, heal failures, scrub progress/finds, and
+    anti-entropy pulls.  Zero-total rows are omitted."""
+    rows = []
+    for key, total in counters.items():
+        name, labels = metrics.parse_key(key)
+        if not name.startswith("repair."):
+            continue
+        label = name + "".join(f"[{v}]" for _k, v in sorted(labels.items()))
+        rows.append((label, int(total) - int(prev.get(key, 0)), int(total)))
+    rows.sort(key=lambda r: (-r[1], -r[2], r[0]))
+    return rows
+
+
 def _render_watch(snap: dict, prev_snap: dict, body: dict, top: int,
                   interval: float) -> str:
     lines = [f"repro.obs watch — gen {body.get('gen')} pid {body.get('pid')} "
@@ -110,6 +126,13 @@ def _render_watch(snap: dict, prev_snap: dict, body: dict, top: int,
         lines.append("")
         lines.append("  faults/degradation (delta per tick):")
         for label, delta, total in faults:
+            lines.append(f"    {label:<40} +{delta:<8} total {total}")
+    repairs = repair_rows(snap.get("counters", {}),
+                          prev_snap.get("counters", {}))
+    if repairs:
+        lines.append("")
+        lines.append("  self-healing (delta per tick):")
+        for label, delta, total in repairs:
             lines.append(f"    {label:<40} +{delta:<8} total {total}")
     lines.append("")
     lines.append(f"  hot branches (top {top}, reads/tick):")

@@ -26,17 +26,19 @@ and the retry classification the client's backoff policy keys on.
 """
 
 from .cache import TieredCache, basket_key
-from .client import EndpointPool, RemoteBasketFile, connect
+from .client import (EndpointPool, RemoteBasketFile, connect, fetch_catalog,
+                     request_scrub)
 from .errors import (RemoteConnectError, RemoteError, RemoteServerError,
-                     RemoteTimeout, ReplicaMismatchError, ServerBusy,
-                     StaleGenerationError)
+                     RemoteTimeout, RepairFailedError, ReplicaMismatchError,
+                     ServerBusy, StaleGenerationError)
 from .protocol import ProtocolError, coalesce, format_url, parse_url
 from .server import BasketServer
 
 __all__ = [
-    "BasketServer", "RemoteBasketFile", "connect", "TieredCache",
+    "BasketServer", "RemoteBasketFile", "connect", "fetch_catalog",
+    "request_scrub", "TieredCache",
     "basket_key", "EndpointPool", "ProtocolError", "coalesce", "parse_url",
     "format_url", "RemoteError", "RemoteTimeout", "RemoteConnectError",
     "RemoteServerError", "StaleGenerationError", "ServerBusy",
-    "ReplicaMismatchError",
+    "ReplicaMismatchError", "RepairFailedError",
 ]

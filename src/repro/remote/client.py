@@ -67,7 +67,8 @@ from .errors import (RemoteConnectError, RemoteServerError, RemoteTimeout,
                      classify_error)
 from .transcode import DEFAULT_ACCEPT
 
-__all__ = ["RemoteBasketFile", "EndpointPool", "connect", "fetch_stats"]
+__all__ = ["RemoteBasketFile", "EndpointPool", "connect", "fetch_stats",
+           "fetch_catalog", "request_scrub"]
 
 # transport-level failures worth a retry (reads are idempotent); server
 # application errors (RemoteServerError) deliberately excluded
@@ -97,6 +98,42 @@ def fetch_stats(host: str, port: int, *, trace: bool = False,
         return rbody
     finally:
         conn.close()
+
+
+def _one_shot(host: str, port: int, req: int, body: dict, resp: int,
+              timeout: float) -> dict:
+    """One request/response round-trip on a throwaway connection."""
+    conn = _Conn(host, int(port), timeout)
+    try:
+        conn.send(P.pack_frame(req, body))
+        ftype, rbody, _payload = conn.recv_frame()
+        if ftype == P.RESP_ERROR:
+            raise RemoteServerError(f"server error: {rbody.get('error')}")
+        if ftype != resp:
+            raise P.ProtocolError(f"expected frame {resp}, got {ftype}")
+        return rbody
+    finally:
+        conn.close()
+
+
+def fetch_catalog(host: str, port: int, path: str, *,
+                  timeout: float = 10.0) -> dict:
+    """One CATALOG round-trip — the anti-entropy reconciler's diff input
+    (per-basket checksums without opening a full RemoteBasketFile)."""
+    return _one_shot(host, port, P.REQ_CATALOG, {"path": str(path)},
+                     P.RESP_CATALOG, timeout)
+
+
+def request_scrub(host: str, port: int, *, action: str = "status",
+                  path: Optional[str] = None,
+                  timeout: float = 300.0) -> dict:
+    """One SCRUB round-trip: ``action`` is ``status`` / ``trigger`` /
+    ``scrub`` (synchronous — size the timeout for a full verify pass of
+    the target when scrubbing)."""
+    body: dict = {"action": action}
+    if path is not None:
+        body["path"] = str(path)
+    return _one_shot(host, port, P.REQ_SCRUB, body, P.RESP_SCRUB, timeout)
 
 
 def _as_endpoint(ep) -> tuple[str, int]:

@@ -23,7 +23,8 @@ from . import protocol as P
 __all__ = [
     "RemoteError", "RemoteTimeout", "RemoteConnectError",
     "RemoteServerError", "StaleGenerationError", "ServerBusy",
-    "ReplicaMismatchError", "classify_error", "RETRYABLE",
+    "ReplicaMismatchError", "RepairFailedError", "classify_error",
+    "RETRYABLE",
 ]
 
 
@@ -66,6 +67,17 @@ class ReplicaMismatchError(RemoteError):
     reader opened).  The endpoint is quarantined — silently mixing
     replicas with divergent content is the one thing a failover layer
     must never do."""
+
+
+class RepairFailedError(RemoteError):
+    """A repair pass (scrub heal, anti-entropy reconcile, ``bscrub``)
+    finished with damage it could not fix — every parity stripe and every
+    replica was tried.  Carries the surviving ``(branch, index)`` list so
+    the operator knows exactly which bytes the fleet has lost."""
+
+    def __init__(self, msg: str, remaining=()):
+        super().__init__(msg)
+        self.remaining = [tuple(r) for r in remaining]
 
 
 def classify_error(exc: BaseException) -> str:

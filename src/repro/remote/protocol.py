@@ -25,6 +25,9 @@ Frame types::
                    | {"objective", "accept"}}
     REQ_PING      {}                                     -> RESP_PING
     REQ_STATS     {} | {"trace": true}                   -> RESP_STATS
+    REQ_SCRUB     {"action": "status"}                   -> RESP_SCRUB
+                  | {"action": "trigger"}
+                  | {"action": "scrub", "path"?}
     RESP_ERROR    {"error"}   (any request may answer this)
     RESP_BUSY     {"error": "busy", "retry_after_s"}
                   (load shedding: the server's admission queue is
@@ -35,6 +38,12 @@ answers with a generation-stamped canonical-JSON snapshot of its obs
 registry plus the per-server ``stats`` dict — no path required, so a
 monitor can point at a bare host:port.  ``"trace": true`` additionally
 drains the server's span ring into ``"trace_events"``.
+
+``REQ_SCRUB`` is the self-healing control verb (DESIGN.md §15):
+``status`` snapshots the server's background scrubber, ``trigger`` wakes
+it for an immediate sweep, and ``scrub`` runs one synchronous scrub of a
+single container (or the whole export root) on the request thread —
+the operator's "prove it is clean *now*" hook (``tools/bscrub.py``).
 
 ``REQ_READV`` is the vectored read: many (branch, basket) ranges per
 round-trip.  The server coalesces them into large sequential ``pread``s
@@ -53,8 +62,8 @@ from repro.core.checksum import adler32_hw
 
 __all__ = [
     "MAGIC", "ProtocolError",
-    "REQ_CATALOG", "REQ_READV", "REQ_PING", "REQ_STATS",
-    "RESP_CATALOG", "RESP_READV", "RESP_PING", "RESP_STATS",
+    "REQ_CATALOG", "REQ_READV", "REQ_PING", "REQ_STATS", "REQ_SCRUB",
+    "RESP_CATALOG", "RESP_READV", "RESP_PING", "RESP_STATS", "RESP_SCRUB",
     "RESP_BUSY", "RESP_ERROR",
     "VERB_NAMES",
     "pack_frame", "read_frame", "recv_exact",
@@ -69,21 +78,23 @@ REQ_CATALOG = 1
 REQ_READV = 2
 REQ_PING = 3
 REQ_STATS = 4
+REQ_SCRUB = 5
 # response types
 RESP_CATALOG = 16
 RESP_READV = 17
 RESP_PING = 18
 RESP_STATS = 19
+RESP_SCRUB = 20
 RESP_BUSY = 30
 RESP_ERROR = 31
 
-_TYPES = {REQ_CATALOG, REQ_READV, REQ_PING, REQ_STATS,
-          RESP_CATALOG, RESP_READV, RESP_PING, RESP_STATS,
+_TYPES = {REQ_CATALOG, REQ_READV, REQ_PING, REQ_STATS, REQ_SCRUB,
+          RESP_CATALOG, RESP_READV, RESP_PING, RESP_STATS, RESP_SCRUB,
           RESP_BUSY, RESP_ERROR}
 
 # human-readable verb names for metric labels and error log lines
 VERB_NAMES = {REQ_CATALOG: "catalog", REQ_READV: "readv",
-              REQ_PING: "ping", REQ_STATS: "stats"}
+              REQ_PING: "ping", REQ_STATS: "stats", REQ_SCRUB: "scrub"}
 
 # sanity bounds: a malformed header must fail fast, not allocate gigabytes
 MAX_BODY = 64 << 20

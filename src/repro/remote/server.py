@@ -61,11 +61,13 @@ class _Catalog:
 
     __slots__ = ("bf", "generation", "dicts")
 
-    def __init__(self, abspath: str):
+    def __init__(self, abspath: str, heal=None):
         # verify=False: the server never decodes raw bytes on the plain
         # path (transcode verifies content equality via stored_len and the
-        # client re-verifies the raw checksum end-to-end)
-        self.bf = BasketFile(abspath, verify=False)
+        # client re-verifies the raw checksum end-to-end).  heal="auto"
+        # (the self-healing server) arms in-place parity reconstruction
+        # for the verify-on-serve path (_readv) and the scrubber.
+        self.bf = BasketFile(abspath, verify=False, heal=heal)
         self.generation = self.bf.generation
         self.dicts = {name: self.bf._dictionary(entry)
                       for name, entry in self.bf.branches.items()}
@@ -137,6 +139,8 @@ class _Handler(socketserver.StreamRequestHandler):
                         self._reply(P.RESP_READV, rbody, payload)
                     elif ftype == P.REQ_STATS:
                         self._reply(P.RESP_STATS, srv._stats_body(body))
+                    elif ftype == P.REQ_SCRUB:
+                        self._reply(P.RESP_SCRUB, srv._scrub_body(body))
                     else:
                         self._reply(P.RESP_ERROR,
                                     {"error": f"unexpected frame type {ftype}"})
@@ -184,6 +188,15 @@ class BasketServer:
     connections idle longer than ``idle_timeout`` are closed; ``close()``
     lets in-flight requests finish for up to ``drain_timeout`` seconds
     before force-closing what remains.
+
+    Self-healing (DESIGN.md §15): ``heal="auto"`` makes READV
+    verify-on-serve — every basket slice is decode-verified before it
+    goes on the wire, and a failing one is reconstructed in place from
+    its parity stripe (repro.repair) rather than served corrupt.
+    ``scrub_mbps`` additionally runs a background :class:`Scrubber`
+    thread over the export root at that byte-rate budget (started with
+    the server, drained with ``close()``); the RBSP ``SCRUB`` verb
+    inspects/triggers it.
     """
 
     def __init__(self, root: str, host: str = "127.0.0.1", port: int = 0,
@@ -192,7 +205,9 @@ class BasketServer:
                  engine: Optional[CompressionEngine] = None,
                  max_inflight: int = 32, admit_queue: int = 128,
                  admit_timeout: float = 5.0, idle_timeout: float = 600.0,
-                 drain_timeout: float = 10.0):
+                 drain_timeout: float = 10.0, heal: Optional[str] = None,
+                 scrub_mbps: Optional[float] = None,
+                 scrub_interval: float = 30.0):
         self.root = os.path.abspath(root)
         if not os.path.isdir(self.root):
             raise NotADirectoryError(self.root)
@@ -204,6 +219,15 @@ class BasketServer:
         self.admit_timeout = float(admit_timeout)
         self.idle_timeout = float(idle_timeout)
         self.drain_timeout = float(drain_timeout)
+        if heal not in (None, "auto"):
+            raise ValueError(f"heal must be None or 'auto', got {heal!r}")
+        self.heal = heal
+        self._scrubber = None
+        if scrub_mbps is not None:
+            from repro.repair import Scrubber
+            self._scrubber = Scrubber(self.root, mbps=scrub_mbps or None,
+                                      heal=heal is not None,
+                                      interval=scrub_interval)
         self.engine = engine if engine is not None \
             else CompressionEngine(workers)
         self._owns_engine = engine is None
@@ -305,6 +329,8 @@ class BasketServer:
             return
         self._closed = True
         self._draining.set()
+        if self._scrubber is not None:
+            self._scrubber.close()
         if self._serving:
             # shutdown() blocks on an event only serve_forever() sets —
             # calling it on a bound-but-never-served server deadlocks
@@ -373,7 +399,7 @@ class BasketServer:
                     pass
                 del self._catalogs[rel]
                 cat.bf.close()
-            cat = _Catalog(abspath)
+            cat = _Catalog(abspath, heal=self.heal)
             self._catalogs[rel] = cat
             return cat
 
@@ -410,6 +436,47 @@ class BasketServer:
         if body.get("trace"):
             out["trace_events"] = obs.trace.drain()
         return out
+
+    # -- self-healing control (SCRUB verb) -------------------------------
+
+    def _scrub_body(self, body: dict) -> dict:
+        """The ``SCRUB`` verb: ``status`` / ``trigger`` poke the
+        background scrubber; ``scrub`` runs one synchronous pass (of a
+        single container when ``path`` is given, else the whole root) on
+        this request's thread and returns the reports."""
+        action = body.get("action", "status")
+        if action == "status":
+            return {"scrubber": self._scrubber.status()
+                    if self._scrubber is not None else None,
+                    "heal": self.heal}
+        if action == "trigger":
+            if self._scrubber is None:
+                raise ValueError("no background scrubber configured "
+                                 "(start the server with scrub_mbps=)")
+            self._scrubber.trigger()
+            return {"triggered": True}
+        if action == "scrub":
+            rel = body.get("path")
+            if self._scrubber is not None:
+                reports = self._scrubber.scrub_now(rel)
+            else:
+                from repro.repair import scrub_container
+                if rel is not None:
+                    reports = [scrub_container(self._resolve(rel),
+                                               heal=self.heal is not None)]
+                else:
+                    reports = []
+                    for dirpath, _d, files in os.walk(self.root):
+                        for fn in sorted(files):
+                            if fn.endswith(".bskt"):
+                                reports.append(scrub_container(
+                                    os.path.join(dirpath, fn),
+                                    heal=self.heal is not None))
+            for r in reports:
+                r["path"] = os.path.relpath(r["path"], self.root) \
+                    if os.path.isabs(r["path"]) else r["path"]
+            return {"reports": reports}
+        raise ValueError(f"unknown scrub action {action!r}")
 
     # -- vectored reads --------------------------------------------------
 
@@ -456,6 +523,23 @@ class BasketServer:
                 for i in members:
                     r_off, r_len = ranges[i]
                     payloads[i] = buf[r_off - off: r_off - off + r_len]
+
+        if self.heal is not None:
+            # verify-on-serve: a slice that fails its decode-verify is
+            # healed from parity (in place — the generation survives) and
+            # re-read before it ever reaches the wire.  Best-effort: an
+            # unhealable basket (double-damaged stripe, no sidecar) is
+            # served as-is so the *client's* end-to-end checksum + cross-
+            # replica quarantine takes over — a hard error here would turn
+            # damage one replica can't fix into damage no replica serves.
+            from repro.core.bfile import CorruptBasketError
+            for i, (branch, idx) in enumerate(wants):
+                try:
+                    payloads[i] = cat.bf.ensure_payload(branch, int(idx),
+                                                        payloads[i])
+                except CorruptBasketError as e:
+                    _LOG.warning("verify-on-serve: unhealable basket "
+                                 "served damaged: %s", e)
 
         n_trans = 0
         wire = body.get("wire")

@@ -1,0 +1,405 @@
+"""repro.repair — parity sidecars, in-place heal, scrubber, anti-entropy.
+
+Covers the PR 8 self-healing guarantees:
+
+* parity is a **sidecar**: container bytes with ``parity=k`` are
+  bit-identical to the pre-PR golden container;
+* the sidecar format itself is golden-pinned (``tests/golden/
+  parity_pr8.parity``) and heals a rotted copy of the golden container;
+* heal is **byte-identical** across precond × codec combos (fuzzed);
+* the scrubber resumes after a simulated restart and its cursor refuses
+  a rewritten container;
+* ``recover_container`` falls back to the parity sidecar's TOC mirror
+  when a torn container has no write journal;
+* ``CheckpointManager.restore()`` heals a rotted latest step, and falls
+  back to the previous known-good step when the latest is unhealable.
+"""
+
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.bfile import (BasketFile, BasketWriter, CorruptBasketError,
+                              read_arrays, recover_container, write_arrays)
+from repro.core.codec import CompressionConfig
+from repro.fault import rot_container
+from repro.io import fdcache
+from repro.repair import (ParityError, ParitySidecar, diff_catalogs,
+                          parity_path, scrub_container)
+from repro.repair.scrub import cursor_path
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _golden_tree(rng):
+    # the exact PR 2 golden corpus (tests/golden/container_pr2.bskt)
+    f = rng.standard_normal(40_000).astype(np.float32)
+    off = np.cumsum(rng.integers(1, 9, 30_000)).astype(np.int64)
+    tok = rng.integers(0, 255, 50_000).astype(np.uint8)
+    return f, off, tok
+
+
+def _write_golden(path, parity=0):
+    rng = np.random.default_rng(42)
+    f, off, tok = _golden_tree(rng)
+    with BasketWriter(path, parity=parity) as w:
+        w.write_branch("f", f, CompressionConfig("lz4", 1, "bitshuffle4"),
+                       32 * 1024)
+        w.write_branch("off", off,
+                       CompressionConfig("repro-deflate", 5, "delta8+shuffle8"),
+                       64 * 1024)
+        w.write_branch("tok", tok, CompressionConfig("lz4", 6, "none"),
+                       16 * 1024)
+        w.write_branch("scalar", np.float64(3.25),
+                       CompressionConfig("none", 0, "none"))
+        w.write_branch("empty", np.zeros((0, 3), np.int32),
+                       CompressionConfig("lz4", 1, "shuffle4"))
+    return f, off, tok
+
+
+# ---------------------------------------------------------------------------
+# parity is a sidecar: container bytes are golden-pinned
+# ---------------------------------------------------------------------------
+
+def test_parity_container_bytes_unchanged(tmp_path):
+    """``BasketWriter(parity=4)`` must produce the exact pre-PR golden
+    container bytes — parity lives in the sidecar, never the format."""
+    p = str(tmp_path / "c.bskt")
+    _write_golden(p, parity=4)
+    golden = open(os.path.join(GOLDEN, "container_pr2.bskt"), "rb").read()
+    assert open(p, "rb").read() == golden
+    sc = ParitySidecar.load(parity_path(p))
+    assert sc.k == 4
+    sc.check_stamp(len(golden), _toc_bytes(p))      # stamp binds these bytes
+
+
+def _toc_bytes(path):
+    with open(path, "rb") as f:
+        f.seek(-16, os.SEEK_END)
+        toc_len = int.from_bytes(f.read(8), "little")
+        f.seek(-16 - toc_len, os.SEEK_END)
+        return f.read(toc_len)
+
+
+def test_golden_parity_sidecar_blob(tmp_path):
+    """The sidecar bytes for the golden corpus are themselves pinned:
+    format drift (stripe map, header compression, trailer) breaks replay
+    of every sidecar in the fleet."""
+    p = str(tmp_path / "c.bskt")
+    _write_golden(p, parity=4)
+    blob = open(parity_path(p), "rb").read()
+    golden = os.path.join(GOLDEN, "parity_pr8.parity")
+    if not os.path.exists(golden):       # first run on a new checkout
+        with open(golden, "wb") as f:
+            f.write(blob)
+    with open(golden, "rb") as f:
+        assert f.read() == blob, \
+            "parity sidecar bytes drifted from tests/golden/" \
+            "parity_pr8.parity — the sidecar format changed"
+    # and the golden sidecar must still parse and describe the container
+    sc = ParitySidecar.load(golden)
+    assert sc.k == 4 and sc.stripes and sc.branches.keys() == \
+        {"f", "off", "tok", "scalar", "empty"}
+
+
+def test_golden_sidecar_heals_golden_container(tmp_path):
+    """Copy the pre-PR golden container next to the pinned sidecar, rot
+    it, and heal back to the golden bytes — cross-PR end-to-end."""
+    p = str(tmp_path / "c.bskt")
+    golden_c = os.path.join(GOLDEN, "container_pr2.bskt")
+    golden_s = os.path.join(GOLDEN, "parity_pr8.parity")
+    if not os.path.exists(golden_s):
+        pytest.skip("golden sidecar not generated yet")
+    shutil.copyfile(golden_c, p)
+    shutil.copyfile(golden_s, parity_path(p))
+    damaged = rot_container(p, seed=11, every=5)     # k=4: <=1 per stripe
+    assert damaged
+    fdcache.invalidate(p)
+    rng = np.random.default_rng(42)
+    f, off, tok = _golden_tree(rng)
+    with BasketFile(p, heal="auto") as bf:
+        np.testing.assert_array_equal(bf.read_branch("f"), f)
+        np.testing.assert_array_equal(bf.read_branch("off"), off)
+        np.testing.assert_array_equal(bf.read_branch("tok"), tok)
+        assert bf.heal_stats["healed"] >= 1
+        assert bf.heal_stats["failed"] == 0
+    # the scrub heals the baskets no read touched (scalar/empty branches)
+    rep = scrub_container(p)
+    assert not rep["unhealable"] and rep["completed"]
+    assert open(p, "rb").read() == open(golden_c, "rb").read()
+    fdcache.invalidate(p)
+
+
+# ---------------------------------------------------------------------------
+# heal byte-identity, fuzzed across precond x codec
+# ---------------------------------------------------------------------------
+
+# (codec, precond, dtype) — preconds paired with an itemsize they accept
+_COMBOS = [
+    ("none", "none", np.int32),
+    ("zlib", "shuffle4", np.float32),
+    ("lz4", "bitshuffle4", np.int32),
+    ("repro-deflate", "delta8+shuffle8", np.int64),
+    ("zlib", "delta8+shuffle8", np.int64),
+    ("lz4", "none", np.uint8),
+]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, len(_COMBOS) - 1), st.integers(0, 2**31 - 1),
+       st.integers(2, 5))
+def test_heal_byte_identity_fuzz(combo, seed, k):
+    """Any single rotted basket per stripe heals back to the exact
+    pre-rot container bytes, for every precond x codec combo."""
+    algo, precond, dtype = _COMBOS[combo]
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(0, 1 << 16, 3_000).astype(dtype) \
+        if np.issubdtype(dtype, np.integer) \
+        else rng.standard_normal(3_000).astype(dtype)
+    cfg = CompressionConfig(algo, 1, precond)
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "c.bskt")
+        with BasketWriter(p, parity=k) as w:
+            w.write_branch("x", arr, cfg, 2048)
+        pristine = open(p, "rb").read()
+        damaged = rot_container(p, seed=seed, every=k + 1)
+        fdcache.invalidate(p)
+        with BasketFile(p, heal="auto") as bf:
+            np.testing.assert_array_equal(bf.read_branch("x"), arr)
+            assert bf.heal_stats["healed"] == len(damaged)
+            assert bf.heal_stats["failed"] == 0
+        assert open(p, "rb").read() == pristine
+        fdcache.invalidate(p)
+
+
+def test_unhealable_two_damaged_stripe_members(tmp_path):
+    """Two rotted members of one stripe defeat single parity: the read
+    must raise CorruptBasketError, never serve reconstructed garbage."""
+    p = str(tmp_path / "c.bskt")
+    rng = np.random.default_rng(3)
+    write_arrays(p, {"x": rng.integers(0, 99, 4_000).astype(np.int64)},
+                 cfg_for=lambda n, a: CompressionConfig("none", 0, "none"),
+                 target_basket_bytes=2048, parity=4)
+    damaged = rot_container(p, seed=5, every=1, max_baskets=2)
+    assert len(damaged) == 2            # stripe 0, members 0 and 1
+    fdcache.invalidate(p)
+    with BasketFile(p, heal="auto") as bf:
+        with pytest.raises(CorruptBasketError):
+            bf.read_branch("x")
+        assert bf.heal_stats["failed"] >= 1
+
+
+def test_rot_container_deterministic(tmp_path):
+    p = str(tmp_path / "c.bskt")
+    rng = np.random.default_rng(7)
+    write_arrays(p, {"x": rng.standard_normal(4_000).astype(np.float32)},
+                 cfg_for=lambda n, a: CompressionConfig("none", 0, "none"),
+                 target_basket_bytes=1024)
+    pristine = open(p, "rb").read()
+    a = rot_container(p, seed=13, every=3)
+    shutil.copyfile(p, p + ".copy")     # re-rot the pristine bytes
+    with open(p, "wb") as f:
+        f.write(pristine)
+    b = rot_container(p, seed=13, every=3)
+    assert a == b and a
+    assert open(p, "rb").read() == open(p + ".copy", "rb").read()
+    fdcache.invalidate(p)
+
+
+# ---------------------------------------------------------------------------
+# scrubber: resume after restart, stale cursor on rewrite
+# ---------------------------------------------------------------------------
+
+def _scrub_corpus(path, seed=17):
+    rng = np.random.default_rng(seed)
+    arrays = {
+        "a": rng.integers(0, 1 << 20, 6_000).astype(np.int64),
+        "b": rng.standard_normal(6_000).astype(np.float32),
+    }
+    write_arrays(path, arrays,
+                 cfg_for=lambda n, a: CompressionConfig("none", 0, "none"),
+                 target_basket_bytes=1024, parity=4)
+    return arrays
+
+
+def test_scrub_resume_after_restart(tmp_path):
+    """A killed scrubber (simulated with ``max_baskets``) resumes from
+    its persisted cursor and still finds + heals damage past the cut."""
+    p = str(tmp_path / "c.bskt")
+    arrays = _scrub_corpus(p)
+    with BasketFile(p) as bf:
+        total = sum(len(bf.branches[n]["baskets"])
+                    for n in bf.branch_names())
+    assert total > 20
+    damaged = rot_container(p, seed=23, every=5)     # k=4 stripes
+    assert damaged
+    fdcache.invalidate(p)
+
+    first = scrub_container(p, max_baskets=10)       # "restart" here
+    assert first["baskets"] == 10 and not first["completed"]
+    assert os.path.exists(cursor_path(p))
+
+    second = scrub_container(p)
+    assert second["resumed"] and second["completed"]
+    assert first["baskets"] + second["baskets"] == total
+    assert first["healed"] + second["healed"] == len(damaged)
+    assert not first["unhealable"] and not second["unhealable"]
+    for name, arr in arrays.items():
+        np.testing.assert_array_equal(read_arrays(p)[name], arr)
+
+    third = scrub_container(p)          # completed cursor: fresh full pass
+    assert third["completed"] and not third["resumed"]
+    assert third["corrupt"] == 0 and third["baskets"] == total
+    fdcache.invalidate(p)
+
+
+def test_scrub_cursor_stale_after_rewrite(tmp_path):
+    """A rewritten container (new content stamp) must invalidate the old
+    cursor — resuming mid-file over different bytes would skip baskets."""
+    p = str(tmp_path / "c.bskt")
+    _scrub_corpus(p, seed=17)
+    partial = scrub_container(p, max_baskets=8)
+    assert not partial["completed"] and os.path.exists(cursor_path(p))
+    fdcache.invalidate(p)
+    _scrub_corpus(p, seed=99)           # rewrite: different bytes
+    fdcache.invalidate(p)
+    rep = scrub_container(p)
+    assert not rep["resumed"] and rep["completed"]
+    fdcache.invalidate(p)
+
+
+def test_scrub_reports_torn_container(tmp_path):
+    p = str(tmp_path / "c.bskt")
+    with open(p, "wb") as f:
+        f.write(b"RBKTv001partial")
+    rep = scrub_container(p)
+    assert "error" in rep and not rep["completed"]
+
+
+# ---------------------------------------------------------------------------
+# recover_container: parity TOC mirror as the boundary fallback
+# ---------------------------------------------------------------------------
+
+def test_recover_container_from_parity_sidecar(tmp_path):
+    """A torn container with no write journal recovers through the
+    parity sidecar's TOC mirror; without either it refuses loudly."""
+    p = str(tmp_path / "c.bskt")
+    rng = np.random.default_rng(31)
+    arr = rng.integers(0, 1 << 10, 5_000).astype(np.int64)
+    write_arrays(p, {"x": arr},
+                 cfg_for=lambda n, a: CompressionConfig("none", 0, "none"),
+                 target_basket_bytes=2048, parity=4)
+    blob = open(p, "rb").read()
+    torn = str(tmp_path / "torn.bskt")
+    with open(torn, "wb") as f:
+        f.write(blob[: int(len(blob) * 0.6)])        # TOC + tail lost
+    shutil.copyfile(parity_path(p), parity_path(torn))
+    rep = recover_container(torn)
+    assert rep["baskets_kept"] > 0
+    got = read_arrays(rep["out_path"])["x"]
+    rows = rep["branches"]["x"]
+    assert rows > 0
+    np.testing.assert_array_equal(got, arr[:rows])
+    os.remove(parity_path(torn))        # now neither journal nor parity
+    from repro.core.bfile import TruncatedContainerError
+    with pytest.raises(TruncatedContainerError):
+        recover_container(torn)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restore: heal in place, else fall back a step
+# ---------------------------------------------------------------------------
+
+def _ckpt_tree(rng):
+    return {"w": rng.standard_normal((64, 33)).astype(np.float32),
+            "step_ids": np.arange(500, dtype=np.int64)}
+
+
+def test_checkpoint_restore_heals_rotted_step(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=3, parity=2)
+    rng = np.random.default_rng(8)
+    tree = _ckpt_tree(rng)
+    mgr.save(1, tree, extra_meta={"step": 1}, wait=True)
+    dp = mgr._data_path(1)
+    assert os.path.exists(parity_path(dp))
+    damaged = rot_container(dp, seed=3, every=3)     # k=2: <=1 per stripe
+    assert damaged
+    fdcache.invalidate(dp)
+    got, meta = mgr.restore()
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    np.testing.assert_array_equal(got["step_ids"], tree["step_ids"])
+    assert meta["step"] == 1
+    fdcache.invalidate(dp)
+
+
+def test_checkpoint_restore_falls_back_to_previous_step(tmp_path, caplog):
+    """An unhealable latest step costs a few steps of retraining, never
+    the run: restore() walks back to the previous known-good step."""
+    import logging
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=3, parity=2)
+    rng = np.random.default_rng(9)
+    t1, t2 = _ckpt_tree(rng), _ckpt_tree(rng)
+    mgr.save(1, t1, extra_meta={"step": 1}, wait=True)
+    mgr.save(2, t2, extra_meta={"step": 2}, wait=True)
+    dp2 = mgr._data_path(2)
+    with open(dp2, "r+b") as f:          # unhealable: trailer sheared off
+        f.truncate(40)
+    fdcache.invalidate(dp2)
+    with caplog.at_level(logging.WARNING, logger="repro.checkpoint"):
+        got, meta = mgr.restore()
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(got["w"], t1["w"])
+    assert any("falling back" in r.message for r in caplog.records)
+    # explicit step= means "this step or nothing"
+    with pytest.raises(Exception):
+        mgr.restore(step=2)
+    fdcache.invalidate(dp2)
+
+
+# ---------------------------------------------------------------------------
+# anti-entropy plumbing (pure functions; the socket path is exercised by
+# tests/test_fault.py soaks and benchmarks/fig_heal.py)
+# ---------------------------------------------------------------------------
+
+def _cat(entries):
+    # minimal CATALOG/TOC shape: {branch: {"baskets": [{"meta": {...}}]}}
+    return {br: {"baskets": [{"meta": m} for m in ms]}
+            for br, ms in entries.items()}
+
+
+def test_diff_catalogs_flags_divergence():
+    good = {"checksum": 1, "orig_len": 8, "entry_start": 0, "entry_count": 2}
+    bad = dict(good, checksum=2)
+    a = _cat({"x": [good, good]})
+    b = _cat({"x": [good, bad]})
+    diffs = diff_catalogs({"a": a, "b": b})
+    assert [(d["branch"], d["index"]) for d in diffs] == [("x", 1)]
+    assert diff_catalogs({"a": a, "b": _cat({"x": [good, good]})}) == []
+    # a replica missing a branch shows as None, not a crash
+    diffs = diff_catalogs({"a": a, "b": _cat({})})
+    assert {d["keys"]["b"] for d in diffs} == {None}
+
+
+def test_parity_sidecar_refuses_rewritten_container(tmp_path):
+    p = str(tmp_path / "c.bskt")
+    rng = np.random.default_rng(12)
+    write_arrays(p, {"x": rng.standard_normal(2_000).astype(np.float32)},
+                 cfg_for=lambda n, a: CompressionConfig("none", 0, "none"),
+                 target_basket_bytes=2048, parity=2)
+    sc = ParitySidecar.load(parity_path(p))
+    sc.check_stamp(os.path.getsize(p), _toc_bytes(p))
+    with pytest.raises(ParityError):
+        sc.check_stamp(os.path.getsize(p) + 1, _toc_bytes(p))
+    with pytest.raises(ParityError):
+        sc.check_stamp(os.path.getsize(p), _toc_bytes(p) + b"x")

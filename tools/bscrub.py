@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""One-shot scrub/heal of basket containers — local or remote::
+
+    tools/bscrub.py data/run3/*.bskt                 # verify + heal in place
+    tools/bscrub.py --no-heal big.bskt               # verify only
+    tools/bscrub.py --mbps 50 /data                  # pace a whole tree
+    tools/bscrub.py repro://host:9147                # server-side full scrub
+    tools/bscrub.py repro://host:9147/run3/ev.bskt   # ... one container
+    tools/bscrub.py --reconcile host:9148 ev.bskt    # pull unhealable
+                                                     # baskets from a replica
+
+Each local PATH may be one container or a directory (every ``*.bskt``
+under it).  A ``repro://`` target runs the scrub on the server via the
+RBSP ``SCRUB`` verb.  With ``--reconcile HOST:PORT`` (repeatable), local
+damage that parity cannot heal is pulled from replica servers through
+the anti-entropy path (:func:`repro.repair.repair_replica`).
+
+Exit status: 0 = everything verified clean (healing counts as clean);
+1 = damage remains that nothing could repair; 2 = usage/connection error.
+The summary names every surviving ``(branch, index)`` — the operator's
+list of what the fleet has actually lost.
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.remote import parse_url, request_scrub  # noqa: E402
+from repro.repair import repair_replica, scrub_container  # noqa: E402
+
+
+def _local_containers(path: str) -> list[str]:
+    if os.path.isdir(path):
+        out = []
+        for dirpath, _dirs, files in os.walk(path):
+            out += [os.path.join(dirpath, f) for f in sorted(files)
+                    if f.endswith(".bskt")]
+        return sorted(out)
+    return [path]
+
+
+def _endpoint(spec: str) -> tuple[str, int]:
+    host, _, port = spec.rpartition(":")
+    if not host or not port.isdigit():
+        raise ValueError(f"{spec!r} is not HOST:PORT")
+    return host, int(port)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools/bscrub.py",
+        description="one-shot scrub/heal of basket containers "
+                    "(repro.repair; DESIGN.md §15)")
+    ap.add_argument("targets", nargs="+",
+                    help="container path, directory, or repro://host:port"
+                         "[/path] URL")
+    ap.add_argument("--no-heal", action="store_true",
+                    help="verify only; report damage without repairing")
+    ap.add_argument("--mbps", type=float, default=None, metavar="MB/S",
+                    help="byte-rate budget (compressed bytes read)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore persisted scrub cursors, start from 0")
+    ap.add_argument("--reconcile", action="append", default=[],
+                    metavar="HOST:PORT",
+                    help="replica endpoint to pull unhealable baskets "
+                         "from (repeatable; local targets only)")
+    ap.add_argument("--timeout", type=float, default=30.0)
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable per-container reports")
+    args = ap.parse_args(argv)
+
+    try:
+        endpoints = [_endpoint(s) for s in args.reconcile]
+    except ValueError as e:
+        ap.error(str(e))
+
+    reports: list[dict] = []
+    rc = 0
+    for target in args.targets:
+        if target.startswith("repro://"):
+            try:
+                rest = target[len("repro://"):]
+                if "/" in rest:
+                    host, port, path = parse_url(target)
+                else:                       # bare endpoint: whole export root
+                    host, port = _endpoint(rest)
+                    path = ""
+            except ValueError as e:
+                print(f"bscrub: {e}", file=sys.stderr)
+                return 2
+            try:
+                resp = request_scrub(host, port, action="scrub",
+                                     path=path or None,
+                                     timeout=args.timeout)
+            except Exception as e:
+                print(f"bscrub: {target}: {e}", file=sys.stderr)
+                return 2
+            reports += resp.get("reports", [])
+            continue
+        for cpath in _local_containers(target):
+            rep = scrub_container(cpath, heal=not args.no_heal,
+                                  mbps=args.mbps,
+                                  resume=not args.no_resume)
+            if endpoints and (rep.get("unhealable") or "error" in rep):
+                try:
+                    rec = repair_replica(
+                        cpath, os.path.basename(cpath), endpoints,
+                        timeout=args.timeout, scrub_mbps=args.mbps)
+                    rep = dict(rec["post_scrub"], reconcile={
+                        k: rec[k] for k in ("pulled", "patched",
+                                            "rewritten", "converged")})
+                except Exception as e:
+                    rep["reconcile_error"] = str(e)
+            reports.append(rep)
+
+    remaining = []
+    for rep in reports:
+        remaining += [(rep.get("path", "?"), br, i)
+                      for br, i in rep.get("unhealable", [])]
+        if "error" in rep or "reconcile_error" in rep:
+            rc = 1
+    if args.json:
+        print(json.dumps(reports, indent=1, sort_keys=True))
+    else:
+        for rep in reports:
+            if "error" in rep:
+                print(f"{rep.get('path', '?')}: TORN — {rep['error']}")
+                continue
+            state = "clean" if not rep.get("unhealable") else "DAMAGED"
+            print(f"{rep.get('path', '?')}: {state} — "
+                  f"{rep.get('baskets', 0)} baskets, "
+                  f"{rep.get('corrupt', 0)} corrupt, "
+                  f"{rep.get('healed', 0)} healed"
+                  + (f", resumed" if rep.get("resumed") else ""))
+    if remaining:
+        rc = 1
+        print(f"bscrub: {len(remaining)} unhealable basket(s):",
+              file=sys.stderr)
+        for path, br, i in remaining:
+            print(f"  {path}: branch={br!r} index={i}", file=sys.stderr)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
