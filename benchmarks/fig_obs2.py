@@ -1,0 +1,249 @@
+"""Distributed-observability benchmark: propagation overhead, durable
+heat, stitched traces (DESIGN.md §16).
+
+Three stages, each answering "can obs v2 stay default-on?":
+
+* **propagation** — a loopback READV workload (every basket of both
+  branches through ``fetch_wire``) with traceparent propagation on vs
+  off (``RemoteBasketFile(propagate=...)``), interleaved same-phase A/B
+  so machine drift cancels, best-of-reps.  The CI gate holds the
+  propagating run within **2%** (+ a timer-jitter epsilon) of the
+  non-propagating run — carrying a 55-byte ``tp`` and minting span ids
+  must be free at wire granularity.
+
+* **heat** — a 40x-skewed workload (hot branch read 40 rounds, cold
+  once) against a server with instant heat flushing; the server is then
+  **restarted** and the cold branch read once more.  ``--check``
+  asserts the reloaded sidecar still ranks the hot branch first with
+  ≥ 10x the cold branch's heat — durability plus EWMA accumulation
+  across a restart, the property the ROADMAP repacker depends on.
+
+* **stitch** — one traced loopback READV; the client ring and the
+  server's ``STATS trace_events`` drain are stitched and the span tree
+  rebuilt.  ``--check`` asserts the client fetch span is an ancestor of
+  the server's readv/pread spans — the ISSUE-9 acceptance shape.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core.bfile import write_arrays
+from repro.core.codec import CompressionConfig
+from repro.remote import BasketServer, RemoteBasketFile
+from repro.remote.client import fetch_stats
+
+from .common import emit
+
+MB = 1 << 20
+OVERHEAD_BUDGET = 0.02          # the CI gate: <2% on loopback READV
+ABS_EPS_S = 0.010               # timer-jitter floor for very fast runs
+HEAT_RATIO_MIN = 10.0           # 40x skew must survive restart ≥ 10x
+
+
+def _bench_dir():
+    for d in ("/dev/shm", None):
+        if d is None or (os.path.isdir(d) and os.access(d, os.W_OK)):
+            return tempfile.TemporaryDirectory(dir=d, prefix="fig_obs2_")
+
+
+def _write_events(td: str, size: int) -> str:
+    rng = np.random.default_rng(23)
+    path = os.path.join(td, "events.bskt")
+    write_arrays(path,
+                 {"energy": np.cumsum(rng.integers(1, 9, size // 8))
+                  .astype(np.int64),
+                  "pid": rng.integers(0, 100, size // 32).astype(np.int32)},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1, "delta8"),
+                 target_basket_bytes=64 * 1024)
+    return path
+
+
+def _read_all(rf: RemoteBasketFile, name: str) -> None:
+    nb = len(rf.branches[name]["baskets"])
+    rf.fetch_wire(name, list(range(nb)))
+
+
+def _propagation_rows(quick: bool) -> list[dict]:
+    reps = 3 if quick else 5
+    size = (4 if quick else 16) * MB
+    t_on = t_off = float("inf")
+    with _bench_dir() as td:
+        _write_events(td, size)
+        with BasketServer(td, workers=4, heat=False) as srv:
+            srv.start()
+            url = srv.url("events.bskt")
+            with RemoteBasketFile(url, wire=None, batch_baskets=64,
+                                  propagate=False) as rf_off, \
+                    RemoteBasketFile(url, wire=None, batch_baskets=64,
+                                     propagate=True) as rf_on:
+                for rf in (rf_off, rf_on):      # warm conns + page cache
+                    _read_all(rf, "energy")
+                for _ in range(reps):
+                    # interleaved same-phase A/B: drift hits both arms
+                    t0 = time.perf_counter()
+                    _read_all(rf_off, "energy")
+                    _read_all(rf_off, "pid")
+                    t_off = min(t_off, time.perf_counter() - t0)
+                    t0 = time.perf_counter()
+                    _read_all(rf_on, "energy")
+                    _read_all(rf_on, "pid")
+                    t_on = min(t_on, time.perf_counter() - t0)
+                    obs.trace.clear()   # bounded either way; keep arms equal
+    pct = (t_on - t_off) / t_off * 100.0
+    rows = []
+    for case, t in [("propagate-off", t_off), ("propagate-on", t_on)]:
+        rows.append({"bench": "fig_obs2", "stage": "propagation",
+                     "case": case, "wall_s": round(t, 4),
+                     "overhead_pct": round(pct, 2)
+                     if case == "propagate-on" else "",
+                     "value": "", "unit": ""})
+    return rows
+
+
+def _heat_rows(quick: bool) -> list[dict]:
+    from repro.obs import heat as H
+    size = (2 if quick else 8) * MB
+    rows = []
+    with _bench_dir() as td:
+        path = _write_events(td, size)
+        # phase 1: 40x-skewed reads, instant flush, clean shutdown
+        with BasketServer(td, workers=2, heat_flush_s=0.0) as srv:
+            srv.start()
+            with RemoteBasketFile(srv.url("events.bskt"), wire=None,
+                                  batch_baskets=64) as rf:
+                for _ in range(40):
+                    _read_all(rf, "energy")
+                _read_all(rf, "pid")
+        # phase 2: restart — the sidecar must reload and keep accumulating
+        with BasketServer(td, workers=2, heat_flush_s=0.0) as srv:
+            srv.start()
+            with RemoteBasketFile(srv.url("events.bskt"), wire=None,
+                                  batch_baskets=64) as rf:
+                _read_all(rf, "pid")
+            live = fetch_stats(srv.host, srv.port, heat=True)
+        doc = H.load_sidecar(path + H.SIDECAR_SUFFIX)
+        ranked = H.rank_branches(doc) if doc else []
+    for branch, heat_now, reads, nbytes in ranked:
+        rows.append({"bench": "fig_obs2", "stage": "heat",
+                     "case": f"heat/{branch}", "wall_s": "",
+                     "overhead_pct": "", "value": round(heat_now, 2),
+                     "unit": ""})
+        rows.append({"bench": "fig_obs2", "stage": "heat",
+                     "case": f"reads/{branch}", "wall_s": "",
+                     "overhead_pct": "", "value": reads, "unit": "reads"})
+    n_live = len(((live.get("heat") or {}).get(os.path.abspath(path))
+                  or {}).get("branches") or {})
+    rows.append({"bench": "fig_obs2", "stage": "heat",
+                 "case": "stats.live_branches", "wall_s": "",
+                 "overhead_pct": "", "value": n_live, "unit": "count"})
+    return rows
+
+
+def _stitch_rows(quick: bool) -> list[dict]:
+    size = (2 if quick else 8) * MB
+    with _bench_dir() as td:
+        _write_events(td, size)
+        with BasketServer(td, workers=2, heat=False) as srv:
+            srv.start()
+            with RemoteBasketFile(srv.url("events.bskt"), wire=None,
+                                  batch_baskets=64) as rf:
+                obs.trace.clear()
+                _read_all(rf, "energy")
+                client_events = obs.trace.drain()
+        # loopback shares one ring: the serve/pread spans can append a
+        # beat after the client saw the response, so take a second
+        # capture once the server has fully drained and stitch both.
+        server_events = obs.trace.drain()
+    merged = obs.trace.stitch(client_events, server_events)
+    roots = obs.trace.build_tree([e for e in merged if e.get("ph") == "X"])
+
+    def _has_chain(node, chain):
+        if not chain:
+            return True
+        head, rest = chain[0], chain[1:]
+        if node["name"] == head:
+            if not rest:
+                return True
+            return any(_has_chain(c, rest) for c in node["children"])
+        return any(_has_chain(c, chain) for c in node["children"])
+
+    chain_ok = any(_has_chain(r, ["rbsp.fetch_wire", "rbsp.serve",
+                                  "server.pread"]) for r in roots)
+    return [{"bench": "fig_obs2", "stage": "stitch",
+             "case": "events.merged", "wall_s": "", "overhead_pct": "",
+             "value": len(merged), "unit": "count"},
+            {"bench": "fig_obs2", "stage": "stitch",
+             "case": "chain.fetch>serve>pread", "wall_s": "",
+             "overhead_pct": "", "value": "ok" if chain_ok else "MISSING",
+             "unit": ""}]
+
+
+def run(out_csv: str | None = None, quick: bool = False) -> list[dict]:
+    rows = (_propagation_rows(quick) + _heat_rows(quick)
+            + _stitch_rows(quick))
+    emit(rows, out_csv)
+    return rows
+
+
+def check(rows: list[dict]) -> int:
+    """CI perf-smoke gate (see module docstring)."""
+    ok = True
+
+    def fail(msg):
+        nonlocal ok
+        print(f"FAIL: {msg}", file=sys.stderr)
+        ok = False
+
+    over = {r["case"]: r for r in rows if r["stage"] == "propagation"}
+    if "propagate-on" not in over or "propagate-off" not in over:
+        fail("missing propagation rows")
+    else:
+        t_on = over["propagate-on"]["wall_s"]
+        t_off = over["propagate-off"]["wall_s"]
+        if t_on > t_off * (1.0 + OVERHEAD_BUDGET) + ABS_EPS_S:
+            fail(f"propagation overhead "
+                 f"{over['propagate-on']['overhead_pct']}% exceeds the "
+                 f"{OVERHEAD_BUDGET:.0%} budget (on={t_on}s off={t_off}s)")
+    heat = {r["case"]: r for r in rows if r["stage"] == "heat"}
+    h_hot = heat.get("heat/energy")
+    h_cold = heat.get("heat/pid")
+    if h_hot is None or h_cold is None:
+        fail("heat sidecar missing a branch after restart")
+    elif float(h_hot["value"]) < float(h_cold["value"]) * HEAT_RATIO_MIN:
+        fail(f"reloaded heat ratio too flat: energy={h_hot['value']} "
+             f"pid={h_cold['value']} (want ≥ {HEAT_RATIO_MIN}x)")
+    if not any(r["case"] == "stats.live_branches" and int(r["value"]) >= 2
+               for r in rows):
+        fail("STATS heat=true did not export reloaded branches")
+    chain = next((r for r in rows
+                  if r["case"] == "chain.fetch>serve>pread"), None)
+    if chain is None or chain["value"] != "ok":
+        fail("stitched trace lacks the client->server causal chain")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller containers, fewer repeats")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless propagation overhead is "
+                         "within budget, reloaded heat ranks the skewed "
+                         "branch ≥10x, and the stitched trace chains "
+                         "client->server (CI perf-smoke)")
+    ap.add_argument("--out", default="artifacts/bench/fig_obs2.csv")
+    args = ap.parse_args(argv)
+    rows = run(args.out, quick=args.quick)
+    return check(rows) if args.check else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

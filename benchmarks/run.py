@@ -21,7 +21,7 @@ import time
 
 from . import (fig2_survey, fig3_decompression, fig45_cfzlib, fig6_precond,
                fig_dict, fig_entropy, fig_fault, fig_heal, fig_obs,
-               fig_parallel, fig_remote, fig_tune, fig_zerocopy,
+               fig_obs2, fig_parallel, fig_remote, fig_tune, fig_zerocopy,
                pipeline_tput, roofline)
 
 BENCHES = {
@@ -34,6 +34,7 @@ BENCHES = {
     "fig_fault": fig_fault,
     "fig_heal": fig_heal,
     "fig_obs": fig_obs,
+    "fig_obs2": fig_obs2,
     "fig_parallel": fig_parallel,
     "fig_remote": fig_remote,
     "fig_tune": fig_tune,

@@ -46,6 +46,7 @@ and the prefetching reader (``repro.io.prefetch``) simultaneously.
 
 from __future__ import annotations
 
+import contextlib
 import logging
 import multiprocessing as mp
 import os
@@ -79,13 +80,29 @@ def cpu_count() -> int:
 # module-level task bodies (picklable, so the process backend can run them)
 # ---------------------------------------------------------------------------
 
-def _obs_pack(raw, cfg, start: int, count: int):
+@contextlib.contextmanager
+def _task_span(name: str, tp, **args):
+    """Span for an engine task body, recorded only when a caller's
+    traceparent rode in with the task — per-basket spans on untraced bulk
+    workloads would flood the ring for nothing.  With ``tp`` set, the
+    span joins the caller's trace even across the process-pool boundary
+    (the worker's ring folds back on :meth:`CompressionEngine.collect_obs`)."""
+    if not tp:
+        yield
+        return
+    with obs.context.activated(tp):
+        with obs.trace.span(name, cat="engine", **args):
+            yield
+
+
+def _obs_pack(raw, cfg, start: int, count: int, tp=None):
     """pack_basket with stage telemetry.  Runs in whichever worker executes
     the task: thread workers hit the parent registry directly; process
     workers hit their own, folded back by :meth:`CompressionEngine.collect_obs`."""
     t0 = time.perf_counter()
-    payload, meta = _basket.pack_basket(raw, cfg, entry_start=start,
-                                        entry_count=count)
+    with _task_span("engine.pack", tp, algo=cfg.algo):
+        payload, meta = _basket.pack_basket(raw, cfg, entry_start=start,
+                                            entry_count=count)
     obs.histogram("engine.pack_s", algo=cfg.algo).observe(
         time.perf_counter() - t0)
     obs.counter("engine.pack.bytes_in", algo=cfg.algo).inc(meta.orig_len)
@@ -93,14 +110,14 @@ def _obs_pack(raw, cfg, start: int, count: int):
     return payload, meta
 
 
-def _pack_task(raw, cfg_fields: tuple, start: int, count: int):
+def _pack_task(raw, cfg_fields: tuple, start: int, count: int, tp=None):
     cfg = _codec.CompressionConfig(*cfg_fields)
-    payload, meta = _obs_pack(raw, cfg, start, count)
+    payload, meta = _obs_pack(raw, cfg, start, count, tp)
     return start, count, payload, meta
 
 
 def _pack_task_shm(slab_name: str, nbytes: int, cfg_fields: tuple,
-                   start: int, count: int):
+                   start: int, count: int, tp=None):
     """Worker body for the slab transport: input read in place from the
     slab, payload written back over it (the input is dead by then).  The
     return value carries only the payload *length* — or the payload bytes
@@ -108,7 +125,7 @@ def _pack_task_shm(slab_name: str, nbytes: int, cfg_fields: tuple,
     exceeded), which the parent handles transparently."""
     raw = _shmem.attach_view(slab_name, nbytes)
     cfg = _codec.CompressionConfig(*cfg_fields)
-    payload, meta = _obs_pack(raw, cfg, start, count)
+    payload, meta = _obs_pack(raw, cfg, start, count, tp)
     if payload is raw:          # identity config: content already in place
         return start, count, nbytes, meta
     n = _shmem.write_back(slab_name, payload)
@@ -184,11 +201,12 @@ def _trial_task(sample, cfg_fields: tuple, reps: int = 1,
 
 def _unpack_task(path: str, offset: int, meta_json: dict,
                  dictionary: Optional[bytes], verify: bool,
-                 ident: Optional[tuple] = None) -> bytes:
+                 ident: Optional[tuple] = None, tp=None) -> bytes:
     meta = _basket.BasketMeta.from_json(meta_json)
-    payload = _fdcache.pread(path, offset, meta.comp_len, expect=ident)
-    t0 = time.perf_counter()
-    raw = _basket.unpack_basket(payload, meta, dictionary, verify=verify)
+    with _task_span("engine.unpack", tp, algo=meta.algo):
+        payload = _fdcache.pread(path, offset, meta.comp_len, expect=ident)
+        t0 = time.perf_counter()
+        raw = _basket.unpack_basket(payload, meta, dictionary, verify=verify)
     obs.histogram("engine.unpack_s", algo=meta.algo).observe(
         time.perf_counter() - t0)
     obs.counter("engine.unpack.bytes_out", algo=meta.algo).inc(meta.orig_len)
@@ -197,14 +215,15 @@ def _unpack_task(path: str, offset: int, meta_json: dict,
 
 def _unpack_task_into(path: str, offset: int, meta_json: dict,
                       dictionary: Optional[bytes], verify: bool, out,
-                      ident: Optional[tuple] = None) -> int:
+                      ident: Optional[tuple] = None, tp=None) -> int:
     """Read + decompress one basket directly into ``out`` (same-process
     destination slice — the thread-pool / serial scatter path)."""
     meta = _basket.BasketMeta.from_json(meta_json)
-    payload = _fdcache.pread(path, offset, meta.comp_len, expect=ident)
-    t0 = time.perf_counter()
-    n = _basket.unpack_basket_into(payload, meta, out, dictionary,
-                                   verify=verify)
+    with _task_span("engine.unpack", tp, algo=meta.algo):
+        payload = _fdcache.pread(path, offset, meta.comp_len, expect=ident)
+        t0 = time.perf_counter()
+        n = _basket.unpack_basket_into(payload, meta, out, dictionary,
+                                       verify=verify)
     obs.histogram("engine.unpack_s", algo=meta.algo).observe(
         time.perf_counter() - t0)
     obs.counter("engine.unpack.bytes_out", algo=meta.algo).inc(meta.orig_len)
@@ -213,9 +232,9 @@ def _unpack_task_into(path: str, offset: int, meta_json: dict,
 
 def _unpack_task_shm(path: str, offset: int, meta_json: dict,
                      dictionary: Optional[bytes], verify: bool,
-                     slab_name: str, ident: Optional[tuple] = None):
+                     slab_name: str, ident: Optional[tuple] = None, tp=None):
     """Worker body: decode into the slab; only the length crosses back."""
-    raw = _unpack_task(path, offset, meta_json, dictionary, verify, ident)
+    raw = _unpack_task(path, offset, meta_json, dictionary, verify, ident, tp)
     n = _shmem.write_back(slab_name, raw)
     return raw if n is None else n
 
@@ -234,13 +253,15 @@ def _warm_task(delay: float = 0.0):
 
 
 def _obs_snapshot_task(delay: float = 0.0):
-    """Worker body for metric folding: each process worker returns (and
-    zeroes) its own registry's delta snapshot.  The sleep is the warmup
-    trick — N sleeping tasks for N workers means one eager worker can't
-    answer them all, so every worker gets drained."""
+    """Worker body for telemetry folding: each process worker returns (and
+    zeroes) its own registry's delta snapshot plus its drained trace ring,
+    so worker spans are not lost at the pool boundary.  The sleep is the
+    warmup trick — N sleeping tasks for N workers means one eager worker
+    can't answer them all, so every worker gets drained."""
     if delay:
         time.sleep(delay)
-    return obs.snapshot(reset=True)
+    return {"metrics": obs.snapshot(reset=True),
+            "trace": obs.trace.drain()}
 
 
 def _completed_future(fn, *args) -> Future:
@@ -398,10 +419,11 @@ class CompressionEngine:
                 f.result()
 
     def collect_obs(self, delay: float = 0.05) -> None:
-        """Fold process-pool workers' metric deltas into this process's
-        registry.  Thread workers already share it; only the forkserver
-        children have private registries.  Safe to call repeatedly — the
-        workers' snapshots are reset-deltas, so nothing double-counts."""
+        """Fold process-pool workers' metric deltas *and trace rings* into
+        this process's registry/ring.  Thread workers already share them;
+        only the forkserver children have private copies.  Safe to call
+        repeatedly — metric snapshots are reset-deltas and rings drain, so
+        nothing double-counts and no span is folded twice."""
         if not obs.enabled():
             return
         with self._lock:
@@ -412,7 +434,12 @@ class CompressionEngine:
             futs = [pool.submit(_obs_snapshot_task, delay)
                     for _ in range(self.workers)]
             for f in futs:
-                obs.merge(f.result())
+                got = f.result()
+                if isinstance(got, dict) and "metrics" in got:
+                    obs.merge(got["metrics"])
+                    obs.trace.ingest(got.get("trace") or [])
+                else:       # a worker running the pre-v2 task body
+                    obs.merge(got)
         except Exception:   # broken pool at teardown: telemetry is advisory
             pass
 
@@ -505,30 +532,32 @@ class CompressionEngine:
         valid until the next iteration (copy if retained)."""
         pool = self._pool_for(cfg.algo if cfg.enabled else "none")
         fields = _cfg_fields(cfg)
+        tp = obs.context.current_traceparent()
         if isinstance(pool, ProcessPoolExecutor):
             slabs = self._slabs()
             if slabs is not None:
-                return self._pack_stream_shm(pool, slabs, chunks, fields)
+                return self._pack_stream_shm(pool, slabs, chunks, fields, tp)
         inline = self.inline_bytes
 
         def submit_one(p, chunk):
             start, count, raw = chunk
             if p is None:
-                return _pack_task(raw, fields, start, count)
+                return _pack_task(raw, fields, start, count, tp)
             if _buf_len(raw) < inline:
                 # small basket: the pool round-trip (pickle + IPC + wakeup)
                 # costs more than compressing right here
-                return _completed_future(_pack_task, raw, fields, start, count)
+                return _completed_future(_pack_task, raw, fields, start,
+                                         count, tp)
             if isinstance(p, ProcessPoolExecutor) and \
                     not isinstance(raw, (bytes, bytearray)):
                 raw = bytes(raw)    # pickle transport needs a real object
-            return p.submit(_pack_task, raw, fields, start, count)
+            return p.submit(_pack_task, raw, fields, start, count, tp)
 
         return self._map_ordered(pool, submit_one, chunks)
 
     def _pack_stream_shm(self, pool: ProcessPoolExecutor,
-                         slabs: _shmem.SlabPool,
-                         chunks: Iterable, fields: tuple) -> Iterator[tuple]:
+                         slabs: _shmem.SlabPool, chunks: Iterable,
+                         fields: tuple, tp=None) -> Iterator[tuple]:
         """pack_stream over the slab transport: same ordered-commit loop,
         but each in-flight basket owns a slab carrying raw input out and
         the payload back.  Yielded payloads may view the slab — the slab is
@@ -549,13 +578,13 @@ class CompressionEngine:
                     n = _buf_len(raw)
                     if n < inline:
                         pending.append((_completed_future(
-                            _pack_task, raw, fields, start, count), None))
+                            _pack_task, raw, fields, start, count, tp), None))
                         continue
                     slab = slabs.acquire(n)
                     try:
                         slab.fill(raw)
                         fut = pool.submit(_pack_task_shm, slab.name, n,
-                                          fields, start, count)
+                                          fields, start, count, tp)
                     except BaseException:
                         slabs.release(slab)
                         raise
@@ -600,21 +629,22 @@ class CompressionEngine:
         the read fails with ``StaleFileError`` if the path was replaced."""
         algo = meta_json.get("algo", "none") if self.unpack_processes else "none"
         pool = self._pool_for(algo)
+        tp = obs.context.current_traceparent()
         if pool is None:
             return _completed_future(_unpack_task, path, offset, meta_json,
-                                     dictionary, verify, ident)
+                                     dictionary, verify, ident, tp)
         if pool is self._proc_pool:
             slabs = self._slabs()
             if slabs is not None:
                 return self._submit_unpack_shm(pool, slabs, path, offset,
                                                meta_json, dictionary, verify,
-                                               ident)
+                                               ident, tp)
         return pool.submit(_unpack_task, path, offset, meta_json,
-                           dictionary, verify, ident)
+                           dictionary, verify, ident, tp)
 
     @staticmethod
     def _submit_unpack_shm(pool, slabs, path, offset, meta_json,
-                           dictionary, verify, ident=None) -> Future:
+                           dictionary, verify, ident=None, tp=None) -> Future:
         """Process unpack over the slab transport: the worker decodes into
         a slab; the parent's completion callback lifts the bytes out (one
         memcpy instead of a pickled pipe round-trip) and recycles it.
@@ -624,10 +654,10 @@ class CompressionEngine:
         slab = slabs.try_acquire(int(meta_json["orig_len"]))
         if slab is None:
             return pool.submit(_unpack_task, path, offset, meta_json,
-                               dictionary, verify, ident)
+                               dictionary, verify, ident, tp)
         try:
             inner = pool.submit(_unpack_task_shm, path, offset, meta_json,
-                                dictionary, verify, slab.name, ident)
+                                dictionary, verify, slab.name, ident, tp)
         except BaseException:
             slabs.release(slab)
             raise
@@ -678,9 +708,11 @@ class CompressionEngine:
         memcpys into ``out``."""
         algo = meta_json.get("algo", "none") if self.unpack_processes else "none"
         pool = self._pool_for(algo)
+        tp = obs.context.current_traceparent()
         if pool is None:
             return _completed_future(_unpack_task_into, path, offset,
-                                     meta_json, dictionary, verify, out, ident)
+                                     meta_json, dictionary, verify, out,
+                                     ident, tp)
         if pool is self._proc_pool:
             slabs = self._slabs()
             slab = slabs.try_acquire(int(meta_json["orig_len"])) \
@@ -691,10 +723,11 @@ class CompressionEngine:
                     # the destination slice — one memcpy, no intermediate
                     inner = pool.submit(_unpack_task_shm, path, offset,
                                         meta_json, dictionary, verify,
-                                        slab.name, ident)
+                                        slab.name, ident, tp)
                 else:
                     inner = pool.submit(_unpack_task, path, offset,
-                                        meta_json, dictionary, verify, ident)
+                                        meta_json, dictionary, verify,
+                                        ident, tp)
             except BaseException:
                 if slab is not None:
                     slabs.release(slab)
@@ -725,4 +758,4 @@ class CompressionEngine:
             inner.add_done_callback(_done)
             return outer
         return pool.submit(_unpack_task_into, path, offset, meta_json,
-                           dictionary, verify, out, ident)
+                           dictionary, verify, out, ident, tp)

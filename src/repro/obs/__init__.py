@@ -1,8 +1,11 @@
 """repro.obs — unified metrics, tracing, and access telemetry.
 
-The observability layer for the whole stack (DESIGN.md §13): a
+The observability layer for the whole stack (DESIGN.md §13, §16): a
 process-wide lock-cheap metrics registry (:mod:`repro.obs.metrics`),
-span tracing with Chrome trace-event export (:mod:`repro.obs.trace`),
+span tracing with Chrome trace-event export and cross-process
+traceparent propagation (:mod:`repro.obs.trace`,
+:mod:`repro.obs.context`), a persistent access-heat log
+(:mod:`repro.obs.heat`), rolling-window SLOs (:mod:`repro.obs.slo`),
 and an RBSP ``STATS`` view served by :class:`repro.remote.BasketServer`
 and read by ``python -m repro.obs`` / ``tools/obstat.py``.
 
@@ -26,17 +29,18 @@ quick run within 2% of the disabled run.
 
 from __future__ import annotations
 
-from repro.obs import metrics, trace
+from repro.obs import context, metrics, trace
 from repro.obs.metrics import (
     NULL, REGISTRY, Registry,
     enabled, set_enabled, format_key, parse_key, quantile_from_buckets,
+    exemplar_for_quantile,
 )
 
 __all__ = [
-    "metrics", "trace", "REGISTRY", "Registry", "NULL",
+    "metrics", "trace", "context", "REGISTRY", "Registry", "NULL",
     "counter", "gauge", "histogram", "snapshot", "merge",
     "enabled", "set_enabled", "format_key", "parse_key",
-    "quantile_from_buckets",
+    "quantile_from_buckets", "exemplar_for_quantile",
 ]
 
 

@@ -16,6 +16,10 @@ trace capture window (drain, wait, drain -> Chrome trace JSON)::
 
     python -m repro.obs HOST:PORT --trace out.json [--duration 5]
 
+stitch multi-process captures into one timeline (DESIGN.md §16)::
+
+    python -m repro.obs --stitch merged.json client.json server.json
+
 Without a target, the one-shot mode dumps *this* process's registry —
 mostly useful under ``python -m repro.obs --json`` in scripts and tests.
 """
@@ -29,6 +33,10 @@ import time
 
 from repro.obs import REGISTRY, metrics, trace
 
+# what --watch renders: poll only these prefixes instead of shipping the
+# whole registry each tick (the STATS "filter" key; bare polls unchanged)
+WATCH_PREFIXES = ["server.", "remote.", "repair.", "bfile.", "obs."]
+
 
 def _parse_target(target: str) -> tuple[str, int]:
     host, _, port = target.rpartition(":")
@@ -37,29 +45,36 @@ def _parse_target(target: str) -> tuple[str, int]:
     return host, int(port)
 
 
-def _fetch(target: str, want_trace: bool = False) -> dict:
+def _fetch(target: str, want_trace: bool = False, filter=None) -> dict:
     from repro.remote.client import fetch_stats
     host, port = _parse_target(target)
-    return fetch_stats(host, port, trace=want_trace)
+    return fetch_stats(host, port, trace=want_trace, filter=filter)
 
 
 def _hist_stats(h: dict) -> tuple[int, float, float, float]:
     n = int(h.get("count", 0))
     mean = h.get("sum", 0.0) / n if n else 0.0
     b = h.get("buckets", {})
-    return (n, mean, metrics.quantile_from_buckets(b, 0.50),
-            metrics.quantile_from_buckets(b, 0.99))
+    s = h.get("bsums")
+    return (n, mean, metrics.quantile_from_buckets(b, 0.50, s),
+            metrics.quantile_from_buckets(b, 0.99, s))
 
 
 def _hist_delta(cur: dict, prev: dict) -> dict:
     """Per-tick histogram delta (counts can only grow)."""
     pb = prev.get("buckets", {})
+    ps = prev.get("bsums", {})
     buckets = {k: int(v) - int(pb.get(k, 0))
                for k, v in cur.get("buckets", {}).items()
                if int(v) - int(pb.get(k, 0)) > 0}
-    return {"count": int(cur.get("count", 0)) - int(prev.get("count", 0)),
-            "sum": float(cur.get("sum", 0.0)) - float(prev.get("sum", 0.0)),
-            "buckets": buckets}
+    bsums = {k: float(cur.get("bsums", {}).get(k, 0.0))
+             - float(ps.get(k, 0.0)) for k in buckets}
+    d = {"count": int(cur.get("count", 0)) - int(prev.get("count", 0)),
+         "sum": float(cur.get("sum", 0.0)) - float(prev.get("sum", 0.0)),
+         "buckets": buckets, "bsums": bsums}
+    if cur.get("exemplars"):
+        d["exemplars"] = cur["exemplars"]
+    return d
 
 
 def hot_branches(counters: dict, prev: dict, top: int) -> list[tuple]:
@@ -152,14 +167,32 @@ def _render_watch(snap: dict, prev_snap: dict, body: dict, top: int,
         if name != "server.request_s":
             continue
         d = _hist_delta(hists[key], prev_h.get(key, {}))
-        n, mean, p50, p99 = _hist_stats(d if d["count"] else hists[key])
+        src = d if d["count"] else hists[key]
+        n, mean, p50, p99 = _hist_stats(src)
         scope = "tick" if d["count"] else "all"
+        ex = metrics.exemplar_for_quantile(src, 0.99)
+        ex_s = f" ex={ex['trace_id'][:12]}" if ex else ""
         lines.append(f"    {labels.get('verb', '?'):<8} n={n:<7} ({scope}) "
                      f"mean={mean * 1e3:.3f}ms p50={p50 * 1e3:.3f}ms "
-                     f"p99={p99 * 1e3:.3f}ms")
+                     f"p99={p99 * 1e3:.3f}ms{ex_s}")
         any_verb = True
     if not any_verb:
         lines.append("    (no requests yet)")
+    slo = body.get("slo")
+    if slo:
+        lines.append("")
+        lines.append("  SLO (rolling window):")
+        for v in slo:
+            status = "OK " if v.get("ok") else "VIOLATED"
+            parts = [f"    {v.get('name', '?'):<20} {status}"]
+            if "p99_s" in v:
+                parts.append(f"p99={v['p99_s'] * 1e3:.3f}ms"
+                             f"/{v['p99_limit_s'] * 1e3:.0f}ms")
+            if "error_rate" in v:
+                parts.append(f"err={v['errors']}/{v['requests']}"
+                             f" burn={v.get('burn', 0.0):.2f}x")
+            parts.append(f"span={v.get('span_s', 0.0):.1f}s")
+            lines.append(" ".join(parts))
     return "\n".join(lines)
 
 
@@ -185,7 +218,24 @@ def main(argv=None) -> int:
                     help="capture a span window to Chrome trace JSON")
     ap.add_argument("--duration", type=float, default=5.0, metavar="S",
                     help="--trace capture window (default 5s)")
+    ap.add_argument("--stitch", nargs="+", metavar="JSON", default=None,
+                    help="OUT.json CAPTURE.json [CAPTURE.json ...]: merge "
+                         "per-process Chrome captures into one timeline")
     args = ap.parse_args(argv)
+
+    if args.stitch is not None:
+        if len(args.stitch) < 2:
+            ap.error("--stitch needs OUT.json plus at least one capture")
+        out_path, inputs = args.stitch[0], args.stitch[1:]
+        caps = []
+        for path in inputs:
+            with open(path) as f:
+                caps.append(json.load(f))
+        merged = trace.stitch(*caps)
+        n = trace.export_chrome(out_path, events=merged)
+        print(f"stitched {len(inputs)} captures -> {n} events "
+              f"in {out_path}")
+        return 0
 
     if args.trace is not None:
         if args.target is None:
@@ -207,7 +257,7 @@ def main(argv=None) -> int:
         tick = 0
         try:
             while True:
-                body = _fetch(args.target)
+                body = _fetch(args.target, filter=WATCH_PREFIXES)
                 snap = body.get("metrics") or {}
                 out = _render_watch(snap, prev, body, args.top, args.interval)
                 # ANSI clear+home when interactive; plain append otherwise

@@ -25,6 +25,16 @@ permanent runtime fixture.  Design constraints, in order:
   zero/underflow, bucket 95 overflow).  One layout for every unit —
   seconds, bytes, basket counts — so snapshots merge without bucket
   negotiation and quantiles come straight from the cumulative counts.
+  Each bucket also accumulates the *sum of observed values* ("bsums"),
+  so quantile estimates report the bucket's true mean instead of a
+  positional guess — exact when a bucket holds one repeated value
+  (e.g. every request took 2.0s: p99 is 2.0, not an interpolated 3.1).
+
+* **exemplars** — when a trace context (:mod:`repro.obs.context`) is
+  active at ``observe()`` time, the histogram remembers the most recent
+  ``(trace_id, span_id, value)`` per bucket.  A p99 read in ``obstat``
+  can then name a *concrete slow trace* to go look at, not just a
+  latency number.
 
 Keys are canonical strings ``name{k=v,...}`` with sorted label keys
 (:func:`format_key` / :func:`parse_key`), so a snapshot serialized as
@@ -40,10 +50,13 @@ import threading
 import time
 from typing import Optional
 
+from repro.obs import context as _context
+
 __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "REGISTRY", "NULL",
     "format_key", "parse_key", "bucket_index", "bucket_bounds",
-    "quantile_from_buckets", "enabled", "set_enabled",
+    "quantile_from_buckets", "exemplar_for_quantile",
+    "enabled", "set_enabled",
 ]
 
 _OFF_VALUES = {"off", "0", "false", "no", "disabled"}
@@ -121,10 +134,19 @@ def bucket_bounds(i: int) -> tuple[float, float]:
     return lo, hi
 
 
-def quantile_from_buckets(buckets: dict, q: float) -> float:
+def quantile_from_buckets(buckets: dict, q: float,
+                          bsums: Optional[dict] = None) -> float:
     """Estimate the ``q``-quantile from ``{bucket_index: count}`` (string
-    or int indices — snapshots carry strings).  Linear interpolation inside
-    the selected bucket; 0.0 for an empty histogram."""
+    or int indices — snapshots carry strings).  0.0 for an empty histogram.
+
+    With ``bsums`` (``{bucket_index: sum_of_values}``, the snapshot's
+    ``"bsums"`` key) the selected bucket reports its observed mean,
+    clamped to the bucket bounds — *exact* when the bucket holds one
+    repeated value, which is what happens at bucket edges (a stream of
+    identical 2.0s observations lands entirely in ``[2, 4)`` and
+    positional interpolation would report up to 2x high).  Without
+    ``bsums`` (older snapshots) it falls back to linear interpolation
+    inside the bucket."""
     items = sorted((int(k), int(v)) for k, v in buckets.items() if int(v))
     total = sum(v for _k, v in items)
     if not total:
@@ -134,10 +156,43 @@ def quantile_from_buckets(buckets: dict, q: float) -> float:
     for i, n in items:
         if seen + n >= target:
             lo, hi = bucket_bounds(i)
+            if bsums is not None:
+                s = bsums.get(str(i), bsums.get(i))
+                if s is not None:
+                    return min(max(float(s) / n, lo), hi)
             frac = (target - seen) / n
             return lo + (hi - lo) * frac
         seen += n
     return bucket_bounds(items[-1][0])[1]
+
+
+def exemplar_for_quantile(hist_snap: dict, q: float) -> Optional[dict]:
+    """The exemplar attached to the bucket containing the ``q``-quantile
+    of a histogram *snapshot* (``{"buckets", "exemplars", ...}``), or
+    None — the hook that links "p99 is slow" to a concrete trace_id."""
+    exemplars = hist_snap.get("exemplars") or {}
+    if not exemplars:
+        return None
+    buckets = hist_snap.get("buckets") or {}
+    items = sorted((int(k), int(v)) for k, v in buckets.items() if int(v))
+    total = sum(v for _k, v in items)
+    if not total:
+        return None
+    target = max(min(q, 1.0), 0.0) * total
+    seen = 0
+    pick = items[-1][0]
+    for i, n in items:
+        if seen + n >= target:
+            pick = i
+            break
+        seen += n
+    # walk down from the selected bucket: the nearest annotated bucket at
+    # or below the quantile is still a representative slow/fast sample
+    for i in range(pick, -1, -1):
+        ex = exemplars.get(str(i), exemplars.get(i))
+        if ex is not None:
+            return ex
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -228,25 +283,40 @@ class _Timer:
 class Histogram:
     """Fixed log2-bucket distribution (see module docstring).
 
-    ``observe(v)`` is one bucket bump + sum/count under the per-metric
-    lock; ``time()`` is a context manager observing elapsed seconds."""
+    ``observe(v)`` is one bucket bump + per-bucket/total sums under the
+    per-metric lock; ``time()`` is a context manager observing elapsed
+    seconds.  With an active trace context the observed value's bucket
+    also records a ``{trace_id, span_id, value}`` exemplar (last writer
+    wins — the freshest sample is the one worth chasing)."""
 
-    __slots__ = ("key", "_lock", "_buckets", "_count", "_sum")
+    __slots__ = ("key", "_lock", "_buckets", "_bsums", "_count", "_sum",
+                 "_exemplars")
     kind = "hists"
 
     def __init__(self, key: str):
         self.key = key
         self._lock = threading.Lock()
         self._buckets = [0] * N_BUCKETS
+        self._bsums = [0.0] * N_BUCKETS
         self._count = 0
         self._sum = 0.0
+        self._exemplars: dict[int, dict] = {}
 
     def observe(self, value: float) -> None:
         i = bucket_index(value)
+        # inlined _context.current(): observe is the hottest instrument
+        # call and the no-context probe must stay near-free
+        s = _context._tls.stack
+        ctx = s[-1] if s else None
         with self._lock:
             self._buckets[i] += 1
+            self._bsums[i] += value
             self._count += 1
             self._sum += value
+            if ctx is not None:
+                self._exemplars[i] = {"trace_id": ctx.trace_id,
+                                      "span_id": ctx.span_id,
+                                      "value": value}
 
     def time(self) -> _Timer:
         return _Timer(self)
@@ -262,17 +332,25 @@ class Histogram:
     def quantile(self, q: float) -> float:
         with self._lock:
             b = {i: n for i, n in enumerate(self._buckets) if n}
-        return quantile_from_buckets(b, q)
+            s = {i: v for i, v in enumerate(self._bsums) if self._buckets[i]}
+        return quantile_from_buckets(b, q, s)
 
     def _snap(self, reset: bool):
         with self._lock:
             d = {"count": self._count, "sum": self._sum,
                  "buckets": {str(i): n for i, n in enumerate(self._buckets)
-                             if n}}
+                             if n},
+                 "bsums": {str(i): s for i, s in enumerate(self._bsums)
+                           if self._buckets[i]}}
+            if self._exemplars:
+                d["exemplars"] = {str(i): dict(ex)
+                                  for i, ex in self._exemplars.items()}
             if reset:
                 self._buckets = [0] * N_BUCKETS
+                self._bsums = [0.0] * N_BUCKETS
                 self._count = 0
                 self._sum = 0.0
+                self._exemplars = {}
         return d
 
     def _merge(self, d) -> None:
@@ -281,6 +359,11 @@ class Histogram:
             self._sum += float(d.get("sum", 0.0))
             for k, n in d.get("buckets", {}).items():
                 self._buckets[int(k)] += int(n)
+            for k, s in d.get("bsums", {}).items():
+                self._bsums[int(k)] += float(s)
+            for k, ex in d.get("exemplars", {}).items():
+                if isinstance(ex, dict):
+                    self._exemplars[int(k)] = dict(ex)
 
 
 class _Null:
@@ -401,8 +484,10 @@ class Registry:
             h = snap["hists"][key]
             n = int(h.get("count", 0))
             mean = h.get("sum", 0.0) / n if n else 0.0
-            p50 = quantile_from_buckets(h.get("buckets", {}), 0.50)
-            p99 = quantile_from_buckets(h.get("buckets", {}), 0.99)
+            p50 = quantile_from_buckets(h.get("buckets", {}), 0.50,
+                                        h.get("bsums"))
+            p99 = quantile_from_buckets(h.get("buckets", {}), 0.99,
+                                        h.get("bsums"))
             lines.append(f"{key} count={n} mean={mean:.6g} "
                          f"p50={p50:.6g} p99={p99:.6g}")
         return "\n".join(lines)

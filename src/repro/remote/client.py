@@ -82,13 +82,29 @@ def connect(url: str, **kw) -> "RemoteBasketFile":
 
 
 def fetch_stats(host: str, port: int, *, trace: bool = False,
-                timeout: float = 10.0) -> dict:
+                filter: Union[None, str, Sequence[str]] = None,
+                heat: bool = False, timeout: float = 10.0) -> dict:
     """One STATS round-trip against a bare ``host:port`` — no catalog, no
     container path, so a monitor (``python -m repro.obs``) can poll any
-    live server without knowing what it exports."""
+    live server without knowing what it exports.
+
+    ``filter`` is a metric-name prefix (or list of prefixes) applied
+    server-side so a poller ships only the slice it renders; ``heat=True``
+    also requests the server's access-heat snapshot.  A bare poll (no
+    kwargs) sends the same empty body as always."""
     conn = _Conn(host, int(port), timeout)
     try:
-        body = {"trace": True} if trace else {}
+        body: dict = {}
+        if trace:
+            body["trace"] = True
+        if filter is not None:
+            body["filter"] = filter if isinstance(filter, str) \
+                else list(filter)
+        if heat:
+            body["heat"] = True
+        tp = obs.context.current_traceparent()
+        if tp:
+            body["tp"] = tp
         conn.send(P.pack_frame(P.REQ_STATS, body))
         ftype, rbody, _payload = conn.recv_frame()
         if ftype == P.RESP_ERROR:
@@ -105,6 +121,9 @@ def _one_shot(host: str, port: int, req: int, body: dict, resp: int,
     """One request/response round-trip on a throwaway connection."""
     conn = _Conn(host, int(port), timeout)
     try:
+        tp = obs.context.current_traceparent()
+        if tp and "tp" not in body:
+            body = dict(body, tp=tp)
         conn.send(P.pack_frame(req, body))
         ftype, rbody, _payload = conn.recv_frame()
         if ftype == P.RESP_ERROR:
@@ -295,7 +314,8 @@ class RemoteBasketFile:
                  timeout: float = 30.0, retries: int = 3,
                  backoff: float = 0.05, backoff_max: float = 1.0,
                  busy_retries: int = 8,
-                 hedge: Union[None, str, float] = None):
+                 hedge: Union[None, str, float] = None,
+                 propagate: bool = True):
         if url is not None:
             host, port, path = P.parse_url(url)
         if endpoints is not None:
@@ -321,6 +341,7 @@ class RemoteBasketFile:
         self.backoff = float(backoff)
         self.backoff_max = float(backoff_max)
         self._hedge = hedge
+        self.propagate = bool(propagate)
         self._rng = random.Random()
         self._rtts: deque = deque(maxlen=128)   # READV wait samples (s)
         if wire is None or wire is False:
@@ -544,10 +565,18 @@ class RemoteBasketFile:
 
         def op():
             t0 = time.perf_counter()
-            with obs.trace.span("rbsp.request", cat="client", verb=verb):
+            # root=propagate: the request span minted here is the parent
+            # the server adopts from the body's "tp" (DESIGN.md §16)
+            with obs.trace.span("rbsp.request", cat="client", verb=verb,
+                                root=self.propagate):
+                sbody = body
+                tp = obs.context.current_traceparent() if self.propagate \
+                    else None
+                if tp:
+                    sbody = dict(body, tp=tp)
                 with self._io_lock:
                     conn = self._ensure_conn()
-                    self._send_on(conn, ftype, body)
+                    self._send_on(conn, ftype, sbody)
                     out = self._recv_on(conn, want)
             obs.histogram("rbsp.rtt_s", verb=verb).observe(
                 time.perf_counter() - t0)
@@ -558,17 +587,33 @@ class RemoteBasketFile:
     def ping(self) -> bool:
         return bool(self._request(P.REQ_PING, {})[0].get("ok"))
 
-    def server_stats(self, trace: bool = False) -> dict:
+    def server_stats(self, trace: bool = False,
+                     filter: Union[None, str, Sequence[str]] = None,
+                     heat: bool = False) -> dict:
         """The server's STATS snapshot over this connection (DESIGN.md
         §13): generation-stamped obs registry + server stats dict;
-        ``trace=True`` also drains the server's span ring."""
-        body = {"trace": True} if trace else {}
+        ``trace=True`` also drains the server's span ring, ``filter``
+        restricts metrics to a name prefix (or prefixes), ``heat=True``
+        includes the access-heat snapshot."""
+        body: dict = {}
+        if trace:
+            body["trace"] = True
+        if filter is not None:
+            body["filter"] = filter if isinstance(filter, str) \
+                else list(filter)
+        if heat:
+            body["heat"] = True
         return self._request(P.REQ_STATS, body)[0]
 
     def _readv_body(self, name: str, idxs: Sequence[int], gen) -> dict:
-        return {"path": self.path, "generation": list(gen),
+        body = {"path": self.path, "generation": list(gen),
                 "baskets": [[name, int(i)] for i in idxs],
                 "wire": self._wire}
+        if self.propagate:
+            tp = obs.context.current_traceparent()
+            if tp:
+                body["tp"] = tp
+        return body
 
     def _split_response(self, body: dict, payload: bytes
                         ) -> list[tuple[bytes, dict]]:
@@ -715,8 +760,11 @@ class RemoteBasketFile:
         wait_h = obs.histogram("rbsp.readv_wait_s")
         pending = idxs
         attempt = busy_attempt = 0
+        # root=propagate: every READV sent below (pipelined rounds and
+        # hedges alike) carries this span's id as "tp", so server-side
+        # readv/pread spans hang off one client fetch span per call
         with obs.trace.span("rbsp.fetch_wire", cat="client", branch=name,
-                            baskets=len(idxs)):
+                            baskets=len(idxs), root=self.propagate):
             while pending:
                 done: list[int] = []
                 busy: list[int] = []

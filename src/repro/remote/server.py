@@ -129,7 +129,11 @@ class _Handler(socketserver.StreamRequestHandler):
                 continue
             t0 = time.perf_counter()
             try:
-                with obs.trace.span("rbsp.serve", cat="server", verb=verb):
+                # adopt the caller's traceparent (if any rode in) so the
+                # serve span — and every span below it, pread/transcode/
+                # engine — chains into the client's trace (DESIGN.md §16)
+                with obs.context.activated(body.get("tp")), \
+                        obs.trace.span("rbsp.serve", cat="server", verb=verb):
                     if ftype == P.REQ_PING:
                         self._reply(P.RESP_PING, {"ok": True})
                     elif ftype == P.REQ_CATALOG:
@@ -147,6 +151,8 @@ class _Handler(socketserver.StreamRequestHandler):
                 obs.counter("server.requests", verb=verb).inc()
                 obs.histogram("server.request_s", verb=verb).observe(
                     time.perf_counter() - t0)
+                if srv.heatlog is not None:
+                    srv.heatlog.maybe_flush()
             except BrokenPipeError:
                 return
             except (socket.timeout, TimeoutError):
@@ -207,7 +213,10 @@ class BasketServer:
                  admit_timeout: float = 5.0, idle_timeout: float = 600.0,
                  drain_timeout: float = 10.0, heal: Optional[str] = None,
                  scrub_mbps: Optional[float] = None,
-                 scrub_interval: float = 30.0):
+                 scrub_interval: float = 30.0,
+                 heat: bool = True, heat_halflife_s: float = 3600.0,
+                 heat_flush_s: float = 30.0,
+                 slo=True):
         self.root = os.path.abspath(root)
         if not os.path.isdir(self.root):
             raise NotADirectoryError(self.root)
@@ -228,6 +237,20 @@ class BasketServer:
             self._scrubber = Scrubber(self.root, mbps=scrub_mbps or None,
                                       heal=heal is not None,
                                       interval=scrub_interval)
+        # durable access-heat telemetry + rolling SLO verdicts (§16).
+        # heat=False turns the sidecars off (read-only serving roots);
+        # slo may be False/None, True (defaults), or a list of SLOSpec.
+        from repro.obs.heat import HeatLog
+        from repro.obs.slo import SLOEngine
+        self.heatlog = HeatLog(halflife_s=heat_halflife_s,
+                               flush_interval_s=heat_flush_s) \
+            if heat else None
+        if slo is True:
+            self.slo_engine: Optional[SLOEngine] = SLOEngine()
+        elif slo:
+            self.slo_engine = SLOEngine(slo)
+        else:
+            self.slo_engine = None
         self.engine = engine if engine is not None \
             else CompressionEngine(workers)
         self._owns_engine = engine is None
@@ -360,6 +383,8 @@ class BasketServer:
                 pass
         if self._thread is not None:
             self._thread.join(timeout=5)
+        if self.heatlog is not None:   # final durable fold of access heat
+            self.heatlog.flush()
         with self._cat_lock:
             cats, self._catalogs = list(self._catalogs.values()), {}
         for c in cats:
@@ -418,21 +443,48 @@ class BasketServer:
 
     # -- observability ---------------------------------------------------
 
+    @staticmethod
+    def _filter_snapshot(snap: dict, prefixes) -> dict:
+        """Restrict a registry snapshot to metric-name prefixes (labels
+        are part of the key but prefixes match the *name*)."""
+        if isinstance(prefixes, str):
+            prefixes = [prefixes]
+        pfx = tuple(str(p) for p in prefixes)
+        out = {}
+        for kind, metrics in snap.items():
+            out[kind] = {k: v for k, v in metrics.items()
+                         if k.startswith(pfx)}
+        return out
+
     def _stats_body(self, body: dict) -> dict:
         """The ``STATS`` response: generation-stamped snapshot of the
         process-wide obs registry plus this server's stats dict.  The
         generation is a per-server monotonic counter so a monitor can
         tell two polls apart (and detect a restarted server by a reset).
         ``"trace": true`` drains the span ring into the response — each
-        buffered event leaves the server exactly once."""
+        buffered event leaves the server exactly once.  ``"filter"`` (a
+        metric-name prefix or list of prefixes) trims the shipped
+        registry; a bare poll still gets everything.  ``"heat": true``
+        includes the access-heat snapshot.  Each poll also ticks the SLO
+        engine, whose rolling verdicts ride the ``"slo"`` key."""
         with self._stat_lock:
             self._stats_gen += 1
             gen = self._stats_gen
             server_stats = dict(self.stats)
+        snap = obs.snapshot()
         out = {"gen": gen, "pid": os.getpid(),
                "uptime_s": time.time() - self._t_start,
                "server": server_stats,
-               "metrics": obs.snapshot()}
+               "metrics": snap}
+        if self.slo_engine is not None:
+            with self._stat_lock:
+                self.slo_engine.tick(snap)
+                out["slo"] = self.slo_engine.evaluate()
+        flt = body.get("filter")
+        if flt:
+            out["metrics"] = self._filter_snapshot(snap, flt)
+        if body.get("heat") and self.heatlog is not None:
+            out["heat"] = self.heatlog.snapshot()
         if body.get("trace"):
             out["trace_events"] = obs.trace.drain()
         return out
@@ -505,12 +557,19 @@ class BasketServer:
             metas.append(dict(b["meta"]))
 
         # per-branch access telemetry: the repacker's input signal.  One
-        # locked add per (path, branch) pair per request, not per basket.
-        per_branch: dict[str, int] = {}
-        for branch, _idx in wants:
-            per_branch[branch] = per_branch.get(branch, 0) + 1
-        for branch, n in per_branch.items():
-            obs.counter("server.reads", path=rel, branch=branch).inc(n)
+        # locked add per (path, branch) pair per request, not per basket;
+        # the heat log additionally folds basket indices + byte volume
+        # into its durable per-container EWMA state.
+        per_branch: dict[str, list] = {}    # branch -> [idx list, bytes]
+        for i, (branch, idx) in enumerate(wants):
+            rec = per_branch.setdefault(branch, [[], 0])
+            rec[0].append(int(idx))
+            rec[1] += ranges[i][1]
+        for branch, (idxs, nbytes) in per_branch.items():
+            obs.counter("server.reads", path=rel, branch=branch).inc(
+                len(idxs))
+            if self.heatlog is not None:
+                self.heatlog.record(abspath, branch, idxs, nbytes)
 
         merged = P.coalesce(ranges, self.max_gap, self.max_span)
         payloads: list[Optional[bytes]] = [None] * len(wants)

@@ -1,0 +1,556 @@
+"""repro.obs v2: trace propagation, heat telemetry, SLO engine, benchdiff.
+
+What's pinned here (DESIGN.md §16):
+
+* traceparent round-trip and malformed-input rejection (a peer's bad
+  header must never fail the request it rode in on);
+* span parentage: nested spans chain through the thread-local context,
+  ``root=True`` mints a trace, id-free spans stay id-free;
+* the loopback client→server READV produces one stitched causal tree —
+  the normalized span-name forest is a golden file;
+* ``obs.trace.dropped`` counts ring evictions; process-pool workers'
+  trace rings fold back through ``collect_obs()``;
+* bucket-mean quantiles are *exact* for repeated values at bucket edges
+  (bsums), and exemplars link a quantile to a concrete trace_id;
+* ``snapshot(reset=True)`` vs ``merge`` under concurrency never double-
+  counts or drops (the worker-folding race);
+* heat sidecars: EWMA decay, atomic persistence, reload-after-restart
+  accumulation, and SIGKILL-mid-flush leaves old-or-new, never torn;
+* the SLO engine judges rolling windows, not lifetime totals;
+* tools/benchdiff.py: exit 0 on the committed trajectory, exit 1 on a
+  synthetic injected regression.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import context as C
+from repro.obs import heat as H
+from repro.obs import metrics as M
+from repro.obs import slo as S
+from repro.obs import trace as T
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+REPO = os.path.dirname(SRC)
+GOLDEN_TREE = os.path.join(os.path.dirname(__file__), "golden",
+                           "trace_tree_pr9.json")
+
+
+# ---------------------------------------------------------------------------
+# context: traceparent round-trip and rejection
+# ---------------------------------------------------------------------------
+
+def test_traceparent_roundtrip():
+    ctx = C.SpanContext(C.new_trace_id(), C.new_span_id())
+    tp = ctx.to_traceparent()
+    assert len(tp) == 55 and tp.startswith("00-")
+    assert C.from_traceparent(tp) == ctx
+    child = ctx.child()
+    assert child.trace_id == ctx.trace_id
+    assert child.span_id != ctx.span_id
+
+
+@pytest.mark.parametrize("bad", [
+    None, 42, "", "garbage", "00-abc-def-01",
+    "00-" + "g" * 32 + "-" + "a" * 16 + "-01",        # non-hex trace
+    "00-" + "0" * 32 + "-" + "a" * 16 + "-01",        # all-zero trace
+    "00-" + "a" * 32 + "-" + "0" * 16 + "-01",        # all-zero span
+    "00-" + "a" * 31 + "-" + "a" * 16 + "-01",        # short trace
+    "00-" + "a" * 32 + "-" + "a" * 16 + "-1",         # short flags
+    "00-" + "a" * 32 + "-" + "a" * 16,                # missing flags
+])
+def test_traceparent_malformed_rejected(bad):
+    assert C.from_traceparent(bad) is None
+
+
+def test_activated_accepts_string_and_none():
+    assert C.current() is None
+    tp = "00-" + "ab" * 16 + "-" + "cd" * 8 + "-01"
+    with C.activated(tp) as ctx:
+        assert C.current() is ctx and ctx.trace_id == "ab" * 16
+        assert C.current_traceparent() == tp
+    assert C.current() is None
+    with C.activated(None) as ctx:                    # no-op
+        assert ctx is None and C.current() is None
+    with C.activated("not-a-traceparent") as ctx:     # malformed => no-op
+        assert ctx is None and C.current() is None
+
+
+# ---------------------------------------------------------------------------
+# span parentage
+# ---------------------------------------------------------------------------
+
+def test_nested_spans_chain_and_plain_spans_stay_id_free():
+    T.clear()
+    with T.span("plain.op"):                          # no ctx, no root
+        pass
+    with T.span("root.op", root=True):
+        with T.span("child.op"):
+            with T.span("grandchild.op"):
+                pass
+    evs = {e["name"]: e for e in T.drain()}
+    assert "span_id" not in (evs["plain.op"].get("args") or {})
+    root = evs["root.op"]["args"]
+    child = evs["child.op"]["args"]
+    grand = evs["grandchild.op"]["args"]
+    assert "parent_id" not in root
+    assert child["parent_id"] == root["span_id"]
+    assert grand["parent_id"] == child["span_id"]
+    assert root["trace_id"] == child["trace_id"] == grand["trace_id"]
+    assert C.current() is None                        # stack fully popped
+
+
+def test_span_adopts_remote_traceparent():
+    T.clear()
+    remote = C.SpanContext(C.new_trace_id(), C.new_span_id())
+    with C.activated(remote.to_traceparent()):
+        with T.span("served.op"):
+            pass
+    (ev,) = T.drain()
+    assert ev["args"]["trace_id"] == remote.trace_id
+    assert ev["args"]["parent_id"] == remote.span_id
+
+
+def test_build_tree_orphans_become_roots():
+    evs = [{"ph": "X", "name": "orphan", "ts": 1.0,
+            "args": {"span_id": "b", "parent_id": "missing"}},
+           {"ph": "X", "name": "anon", "ts": 2.0, "args": {}}]
+    roots = T.build_tree(evs)
+    assert [r["name"] for r in roots] == ["orphan"]   # anon has no span_id
+
+
+# ---------------------------------------------------------------------------
+# ring eviction accounting + worker trace folding
+# ---------------------------------------------------------------------------
+
+def test_trace_dropped_counter_on_eviction():
+    T.clear()
+    T.set_capacity(4)
+    try:
+        before = obs.snapshot()["counters"].get("obs.trace.dropped", 0)
+        for i in range(10):
+            T.instant(f"e{i}")
+        dropped = obs.snapshot()["counters"]["obs.trace.dropped"] - before
+        assert dropped == 6                           # 10 events, 4 kept
+        assert [e["name"] for e in T.events()] == [f"e{i}" for i in
+                                                   range(6, 10)]
+    finally:
+        T.set_capacity(65536)
+        T.clear()
+
+
+def test_ingest_folds_foreign_events():
+    T.clear()
+    n = T.ingest([{"name": "w.op", "ph": "X", "ts": 1.0}, "junk", None])
+    assert n == 1
+    assert [e["name"] for e in T.drain()] == ["w.op"]
+
+
+def test_process_pool_worker_spans_fold_back():
+    """A traced submit through the *process* pool must bring the worker's
+    engine.unpack span home via collect_obs() (drain + ingest)."""
+    from repro.core.codec import CompressionConfig
+    from repro.io.engine import CompressionEngine
+
+    raw = np.arange(65_536, dtype=np.int64).tobytes()
+    T.clear()
+    with CompressionEngine(workers=1, shm=False) as eng:
+        with T.span("test.root", root=True):
+            out = list(eng.pack_stream(
+                [(0, 65_536, raw)], CompressionConfig("repro-deflate", 1)))
+            assert len(out) == 1
+        eng.collect_obs()
+    names = {e["name"]: e for e in T.drain()}
+    assert "engine.pack" in names
+    root = names["test.root"]["args"]
+    pack = names["engine.pack"]["args"]
+    assert pack["trace_id"] == root["trace_id"]       # one causal tree
+
+
+# ---------------------------------------------------------------------------
+# bucket-mean quantiles (bsums) + exemplars
+# ---------------------------------------------------------------------------
+
+def test_quantile_exact_for_repeated_value_at_bucket_edge():
+    """2.0 sits exactly on a bucket edge ([2, 4)); positional
+    interpolation would report up to ~4.0 for high quantiles, bucket
+    means report 2.0 exactly."""
+    reg = M.Registry()
+    h = reg.histogram("lat_s")
+    for _ in range(1000):
+        h.observe(2.0)
+    for q in (0.5, 0.9, 0.99, 1.0):
+        assert h.quantile(q) == 2.0
+    # mixed bucket: the mean is exact per-bucket, clamped to bounds
+    h2 = reg.histogram("mix_s")
+    for _ in range(99):
+        h2.observe(1.0)
+    h2.observe(256.0)
+    assert h2.quantile(0.5) == 1.0                    # mean of [1,2) bucket
+    assert h2.quantile(0.999) == 256.0
+
+
+def test_quantile_falls_back_without_bsums():
+    b = {str(M.bucket_index(1.0)): 100}               # old-style snapshot
+    q = M.quantile_from_buckets(b, 0.5)
+    lo, hi = M.bucket_bounds(M.bucket_index(1.0))
+    assert lo < q < hi                                # interpolated
+
+
+def test_exemplar_links_quantile_to_trace():
+    reg = M.Registry()
+    h = reg.histogram("req_s")
+    for _ in range(99):
+        h.observe(0.001)                              # no context: no exemplar
+    slow = C.SpanContext(C.new_trace_id(), C.new_span_id())
+    with C.activated(slow):
+        h.observe(4.0)
+    snap = reg.snapshot()["hists"]["req_s"]
+    # q=0.999 lands in the slow bucket (cumulative 99 < target 99.9)
+    ex = M.exemplar_for_quantile(snap, 0.999)
+    assert ex and ex["trace_id"] == slow.trace_id
+    assert ex["value"] == 4.0
+    assert M.exemplar_for_quantile(snap, 0.0) is None  # fast bucket: none
+    # exemplars survive the wire and merge last-writer-wins
+    other = M.Registry()
+    other.merge(json.loads(json.dumps(reg.snapshot(), sort_keys=True)))
+    ex2 = M.exemplar_for_quantile(other.snapshot()["hists"]["req_s"], 0.999)
+    assert ex2 == ex
+
+
+# ---------------------------------------------------------------------------
+# snapshot(reset)+merge concurrency: never double-count, never drop
+# ---------------------------------------------------------------------------
+
+def test_concurrent_reset_snapshots_and_merge_exact_total():
+    src, dst = M.Registry(), M.Registry()
+    N_THREADS, N_INC = 4, 25_000
+    stop = threading.Event()
+    merged_lock = threading.Lock()
+
+    def worker():
+        c = src.counter("n")
+        h = src.histogram("v_s")
+        for _ in range(N_INC):
+            c.inc()
+            h.observe(1.0)
+
+    def folder():
+        while not stop.is_set():
+            snap = src.snapshot(reset=True)
+            with merged_lock:
+                dst.merge(snap)
+
+    threads = [threading.Thread(target=worker) for _ in range(N_THREADS)]
+    f = threading.Thread(target=folder)
+    f.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    f.join()
+    dst.merge(src.snapshot(reset=True))               # the final delta
+    snap = dst.snapshot()
+    assert snap["counters"]["n"] == N_THREADS * N_INC
+    assert snap["hists"]["v_s"]["count"] == N_THREADS * N_INC
+    assert snap["hists"]["v_s"]["sum"] == pytest.approx(N_THREADS * N_INC)
+    b = snap["hists"]["v_s"]["buckets"]
+    assert sum(int(v) for v in b.values()) == N_THREADS * N_INC
+
+
+# ---------------------------------------------------------------------------
+# heat: EWMA, persistence, reload, crash safety
+# ---------------------------------------------------------------------------
+
+def test_heat_ewma_decays_by_halflife():
+    assert H._decay(100.0, 0.0, 60.0) == 100.0
+    assert H._decay(100.0, 60.0, 60.0) == pytest.approx(50.0)
+    assert H._decay(100.0, 120.0, 60.0) == pytest.approx(25.0)
+
+
+def test_heatlog_records_and_ranks(tmp_path):
+    hl = H.HeatLog(halflife_s=3600.0)
+    p = str(tmp_path / "a.bskt")
+    for _ in range(40):
+        hl.record(p, "hot", [0, 1], 2048)
+    hl.record(p, "cold", [5], 64)
+    snap = hl.snapshot()
+    rec = snap[os.path.abspath(p)]["branches"]
+    assert rec["hot"]["reads"] == 80 and rec["cold"]["reads"] == 1
+    assert rec["hot"]["heat"] > 10 * rec["cold"]["heat"]
+    assert rec["hot"]["baskets_hot"] == {"0": 40, "1": 40}
+
+
+def test_heat_sidecar_persists_and_reloads(tmp_path):
+    p = str(tmp_path / "a.bskt")
+    hl = H.HeatLog(halflife_s=3600.0)
+    hl.record(p, "hot", [0], 1024)
+    hl.record(p, "hot", [0], 1024)
+    hl.flush()
+    side = os.path.abspath(p) + H.SIDECAR_SUFFIX
+    assert os.path.exists(side)
+    doc = H.load_sidecar(side)
+    assert doc["version"] == 1
+    # a new process adopts the sidecar and keeps accumulating
+    hl2 = H.HeatLog(halflife_s=3600.0)
+    hl2.record(p, "hot", [0], 1024)
+    hl2.record(p, "cold", [3], 64)
+    snap = hl2.snapshot()[os.path.abspath(p)]["branches"]
+    assert snap["hot"]["reads"] == 3                  # 2 reloaded + 1 new
+    ranked = H.rank_branches(H.load_sidecar(side))
+    assert ranked[0][0] == "hot"
+
+
+def test_heat_sidecar_corrupt_is_ignored(tmp_path):
+    side = str(tmp_path / ("x.bskt" + H.SIDECAR_SUFFIX))
+    for blob in (b"", b"not json", b'{"version": 99}',
+                 b'{"version": 1, "branches": "nope"}'):
+        with open(side, "wb") as f:
+            f.write(blob)
+        assert H.load_sidecar(side) is None
+    hl = H.HeatLog()
+    hl.record(str(tmp_path / "x.bskt"), "b", [0], 1)  # adopts nothing
+    assert hl.snapshot()
+
+
+def test_heat_sidecar_sigkill_mid_flush_never_torn(tmp_path):
+    """Kill a flushing writer at a random moment; the sidecar must
+    always parse as the old or the new generation — never torn (the
+    atomic tmp→fsync→rename commit, same contract as PR 7 containers)."""
+    p = str(tmp_path / "k.bskt")
+    side = os.path.abspath(p) + H.SIDECAR_SUFFIX
+    hl = H.HeatLog()
+    hl.record(p, "v1", [0], 1)
+    hl.flush()
+    old = open(side, "rb").read()
+
+    script = (
+        "import sys\n"
+        f"sys.path.insert(0, {SRC!r})\n"
+        "from repro.obs.heat import HeatLog\n"
+        "hl = HeatLog()\n"
+        "for i in range(2000):\n"
+        "    hl.record(sys.argv[1], 'v2_%d' % i, list(range(64)), 1 << 20)\n"
+        "while True:\n"
+        "    hl.flush()\n")
+    for delay in (0.05, 0.1, 0.2):
+        proc = subprocess.Popen([sys.executable, "-c", script, p])
+        time.sleep(delay)
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+        blob = open(side, "rb").read()
+        doc = H.load_sidecar(side)
+        assert doc is not None, "sidecar torn by SIGKILL"
+        assert blob == old or "v2_0" in doc["branches"]
+
+
+# ---------------------------------------------------------------------------
+# SLO engine
+# ---------------------------------------------------------------------------
+
+def _snap_with(verb: str, n: int, bucket_val: float, errors: int = 0):
+    i = M.bucket_index(bucket_val)
+    key = M.format_key("server.request_s", {"verb": verb})
+    snap = {"counters": {M.format_key("server.requests", {"verb": verb}): n},
+            "hists": {key: {"count": n, "sum": n * bucket_val,
+                            "buckets": {str(i): n},
+                            "bsums": {str(i): n * bucket_val}}}}
+    if errors:
+        snap["counters"][M.format_key("server.errors",
+                                      {"verb": verb})] = errors
+    return snap
+
+
+def test_slo_needs_two_ticks_then_judges_window_delta():
+    eng = S.SLOEngine([S.SLOSpec("readv-latency", "readv", p99_s=0.250)])
+    eng.tick(_snap_with("readv", 100, 0.010), t=1000.0)
+    assert eng.evaluate() == []                       # one tick: no window
+    eng.tick(_snap_with("readv", 200, 0.010), t=1010.0)
+    (v,) = eng.evaluate()
+    assert v["ok"] and v["requests"] == 100
+    assert v["p99_s"] < 0.250
+
+
+def test_slo_flags_p99_violation_from_window_not_lifetime():
+    """900 historically-fast requests must not mask a slow window."""
+    eng = S.SLOEngine([S.SLOSpec("readv-latency", "readv", p99_s=0.250)],
+                      max_ticks=16)
+    fast = _snap_with("readv", 900, 0.010)
+    eng.tick(fast, t=0.0)
+    slow = _snap_with("readv", 900, 0.010)
+    slow["hists"][M.format_key("server.request_s", {"verb": "readv"})] = {
+        "count": 1000,
+        "sum": 900 * 0.010 + 100 * 2.0,
+        "buckets": {str(M.bucket_index(0.010)): 900,
+                    str(M.bucket_index(2.0)): 100},
+        "bsums": {str(M.bucket_index(0.010)): 9.0,
+                  str(M.bucket_index(2.0)): 200.0}}
+    slow["counters"][M.format_key("server.requests",
+                                  {"verb": "readv"})] = 1000
+    eng.tick(slow, t=10.0)
+    (v,) = eng.evaluate()
+    assert not v["ok"]
+    assert v["p99_s"] == pytest.approx(2.0)
+
+
+def test_slo_error_budget_burn():
+    eng = S.SLOEngine([S.SLOSpec("readv-errors", "readv",
+                                 error_budget=0.01)])
+    eng.tick(_snap_with("readv", 100, 0.001, errors=0), t=0.0)
+    eng.tick(_snap_with("readv", 200, 0.001, errors=5), t=10.0)
+    (v,) = eng.evaluate()
+    assert not v["ok"]
+    assert v["error_rate"] == pytest.approx(0.05)
+    assert v["burn"] == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------------------
+# benchdiff: the perf-trajectory sentinel
+# ---------------------------------------------------------------------------
+
+BENCHDIFF = os.path.join(REPO, "tools", "benchdiff.py")
+
+
+def _write_bench(d, pr, value, unit="MB/s"):
+    doc = {"schema": 1, "benches": {"b": [
+        {"bench": "b", "stage": "s", "case": "c",
+         "value": value, "unit": unit, "wall_s": ""}]}}
+    with open(os.path.join(d, f"BENCH_pr{pr}.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def test_benchdiff_green_on_committed_trajectory():
+    r = subprocess.run([sys.executable, BENCHDIFF], capture_output=True,
+                       text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "trajectory" in r.stdout
+
+
+def test_benchdiff_flags_injected_regression(tmp_path):
+    d = str(tmp_path)
+    _write_bench(d, 1, 1000.0)
+    _write_bench(d, 2, 1010.0)
+    _write_bench(d, 3, 400.0)                         # -60% throughput
+    r = subprocess.run([sys.executable, BENCHDIFF, "--dir", d],
+                       capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "REGRESSED" in r.stdout
+    # within the noise band: green
+    _write_bench(d, 3, 950.0)
+    r = subprocess.run([sys.executable, BENCHDIFF, "--dir", d],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout
+
+
+def test_benchdiff_one_lucky_baseline_cannot_fail_forever(tmp_path):
+    """Regression = worse than ALL baselines beyond the band, so a single
+    historically lucky-fast run does not poison the gate."""
+    d = str(tmp_path)
+    _write_bench(d, 1, 5000.0)                        # lucky outlier
+    _write_bench(d, 2, 1000.0)
+    _write_bench(d, 3, 900.0)                         # fine vs pr2
+    r = subprocess.run([sys.executable, BENCHDIFF, "--dir", d],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout
+
+
+def test_benchdiff_skips_directionless_units(tmp_path):
+    d = str(tmp_path)
+    _write_bench(d, 1, 1280, unit="reads")
+    _write_bench(d, 2, 32, unit="reads")              # workload constant
+    r = subprocess.run([sys.executable, BENCHDIFF, "--dir", d],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout
+
+
+# ---------------------------------------------------------------------------
+# the acceptance loopback: one stitched trace + heat restart + heatmap
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def skewed_dir(tmp_path):
+    from repro.core.bfile import write_arrays
+    from repro.core.codec import CompressionConfig
+    rng = np.random.default_rng(11)
+    write_arrays(str(tmp_path / "ev.bskt"),
+                 {"hot": rng.integers(0, 99, 150_000).astype(np.int64),
+                  "cold": rng.integers(0, 99, 150_000).astype(np.int32)},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1, "delta8"),
+                 target_basket_bytes=32 * 1024)
+    return tmp_path
+
+
+def _tree_names(roots):
+    """Normalize a span forest to names only (ids and times are random)."""
+    return [{"name": r["name"], "children": _tree_names(r["children"])}
+            for r in roots]
+
+
+def test_loopback_readv_stitches_one_causal_tree(skewed_dir):
+    from repro.remote import BasketServer, RemoteBasketFile
+    with BasketServer(str(skewed_dir), workers=2, heat=False) as srv:
+        srv.start()
+        with RemoteBasketFile(srv.url("ev.bskt"), wire=None) as rf:
+            T.clear()
+            rf.fetch_wire("hot", [0])
+            client = T.drain()
+    server = T.drain()                                # post-shutdown stragglers
+    merged = T.stitch(client, server)
+    roots = T.build_tree([e for e in merged
+                          if (e.get("args") or {}).get("trace_id")])
+    forest = _tree_names(roots)
+    got = json.dumps(forest, sort_keys=True, indent=1)
+    if not os.path.exists(GOLDEN_TREE):               # first run: write golden
+        with open(GOLDEN_TREE, "w") as f:
+            f.write(got)
+    assert got == open(GOLDEN_TREE).read(), (
+        "stitched span forest drifted from tests/golden/trace_tree_pr9.json;"
+        " if the propagation chain changed intentionally, delete the golden"
+        " and rerun")
+    # and the shape is the documented one regardless of the golden
+    assert forest == [{"name": "rbsp.fetch_wire", "children": [
+        {"name": "rbsp.serve", "children": [
+            {"name": "server.pread", "children": []}]}]}]
+
+
+def test_heat_survives_server_restart_and_heatmap_ranks_it(skewed_dir):
+    from repro.remote import BasketServer, RemoteBasketFile
+    root = str(skewed_dir)
+    with BasketServer(root, workers=2, heat_flush_s=0.0) as srv:
+        srv.start()
+        with RemoteBasketFile(srv.url("ev.bskt"), wire=None) as rf:
+            nb = len(rf.branches["hot"]["baskets"])
+            for _ in range(40):
+                rf.fetch_wire("hot", list(range(nb)))
+            rf.fetch_wire("cold", [0])
+    # restart: the sidecar reloads and keeps accumulating
+    with BasketServer(root, workers=2, heat_flush_s=0.0) as srv:
+        srv.start()
+        with RemoteBasketFile(srv.url("ev.bskt"), wire=None) as rf:
+            rf.fetch_wire("cold", [0])
+    side = os.path.join(root, "ev.bskt" + H.SIDECAR_SUFFIX)
+    doc = H.load_sidecar(side)
+    ranked = H.rank_branches(doc)
+    assert ranked[0][0] == "hot"
+    assert ranked[0][1] > 10 * ranked[1][1]           # 40x skew, ≥10x heat
+    assert ranked[1][2] == 2                          # cold reads accumulated
+    # tools/heatmap.py agrees (both sidecar-scan and --json modes)
+    heatmap = os.path.join(REPO, "tools", "heatmap.py")
+    r = subprocess.run([sys.executable, heatmap, root, "--json"],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    rows = json.loads(r.stdout)["rows"]
+    assert rows[0]["branch"] == "hot"

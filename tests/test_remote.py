@@ -433,6 +433,94 @@ def test_golden_blob_still_parses():
 
 
 # ---------------------------------------------------------------------------
+# PR-9 body extensions: traceparent + STATS filter/heat (golden + live)
+# ---------------------------------------------------------------------------
+
+GOLDEN9 = os.path.join(os.path.dirname(__file__), "golden", "wire_pr9.bin")
+
+
+def _golden_frames_pr9() -> bytes:
+    """Fully-pinned frames for the PR-9 body keys: ``tp`` (traceparent
+    propagation) on READV, ``filter``/``heat`` on STATS.  Bodies are
+    free-form canonical JSON so the frame layout is untouched — this
+    pins that the *extended* bodies stay byte-stable too, alongside the
+    PR-5 golden which pins that the old bodies never changed."""
+    tp = "00-000102030405060708090a0b0c0d0e0f-0001020304050607-01"
+    f1 = P.pack_frame(P.REQ_READV, {
+        "path": "events.bskt", "generation": [11, 22],
+        "baskets": [["Jet_pt", 0]], "tp": tp})
+    f2 = P.pack_frame(P.REQ_STATS, {"filter": ["remote.", "server."],
+                                    "heat": True, "tp": tp})
+    f3 = P.pack_frame(P.REQ_STATS, {})              # bare poll, unchanged
+    return f1 + f2 + f3
+
+
+def test_golden_wire_blob_pr9():
+    blob = _golden_frames_pr9()
+    if not os.path.exists(GOLDEN9):     # first run: write the golden
+        with open(GOLDEN9, "wb") as f:
+            f.write(blob)
+    with open(GOLDEN9, "rb") as f:
+        assert f.read() == blob, (
+            "PR-9 wire frames changed byte-for-byte — if the protocol "
+            "change is intentional, regenerate tests/golden/wire_pr9.bin")
+
+
+def test_golden_blob_pr9_still_parses():
+    import io
+    r = io.BytesIO(_golden_frames_pr9())
+    seen = []
+    while True:
+        try:
+            ftype, body, _payload = P.read_frame(r)
+        except EOFError:
+            break
+        seen.append((ftype, body))
+    assert [t for t, _b in seen] == [P.REQ_READV, P.REQ_STATS, P.REQ_STATS]
+    assert seen[0][1]["tp"].startswith("00-")
+    assert seen[1][1]["filter"] == ["remote.", "server."]
+    assert seen[2][1] == {}
+
+
+def test_stats_filter_prunes_metrics(served):
+    from repro.remote.client import fetch_stats
+    srv = served["server"]
+    with _open(served) as rf:
+        rf.read_branch("Jet_pt")                    # ensure server.* exists
+    bare = fetch_stats(srv.host, srv.port)
+    bare_keys = set(bare["metrics"]["counters"])
+    assert any(not k.startswith("server.") for k in bare_keys)
+
+    body = fetch_stats(srv.host, srv.port, filter="server.")
+    for kind in ("counters", "gauges", "hists"):
+        for k in body["metrics"].get(kind, {}):
+            assert k.startswith("server."), k
+    assert any(k.startswith("server.reads")
+               for k in body["metrics"]["counters"])
+
+    # a prefix list unions (each poll itself bumps server.requests, so
+    # compare as a superset), and an unmatched prefix yields nothing
+    body2 = fetch_stats(srv.host, srv.port, filter=["server.", "nosuch."])
+    keys2 = set(body2["metrics"]["counters"])
+    assert keys2 >= {k for k in bare_keys if k.startswith("server.")}
+    assert all(k.startswith("server.") for k in keys2)
+    body3 = fetch_stats(srv.host, srv.port, filter="nosuch.")
+    assert body3["metrics"]["counters"] == {}
+
+
+def test_stats_heat_key_opt_in(served):
+    from repro.remote.client import fetch_stats
+    srv = served["server"]
+    with _open(served) as rf:
+        rf.read_branch("Jet_pt")
+    assert "heat" not in fetch_stats(srv.host, srv.port)   # bare: absent
+    body = fetch_stats(srv.host, srv.port, heat=True)
+    hot = [rec for rec in body["heat"].values()
+           if "Jet_pt" in rec["branches"]]
+    assert hot and hot[0]["branches"]["Jet_pt"]["reads"] >= 1
+
+
+# ---------------------------------------------------------------------------
 # generation staleness (the PR-5 bugfix)
 # ---------------------------------------------------------------------------
 

@@ -357,12 +357,12 @@ def test_map_ordered_drains_failures_on_close(caplog):
 
         calls = {"n": 0}
 
-        def flaky(raw, fields, start, count):
+        def flaky(raw, fields, start, count, tp=None):
             calls["n"] += 1
             if start >= 1:
                 time.sleep(0.05)
                 raise Boom("worker died late")
-            return orig(raw, fields, start, count)
+            return orig(raw, fields, start, count, tp)
 
         engine_mod._pack_task = flaky
         try:

@@ -1,0 +1,192 @@
+#!/usr/bin/env python
+"""Perf-trajectory sentinel: detect regressions across BENCH_pr*.json.
+
+Every PR commits a machine-readable perf artifact
+(``artifacts/bench/BENCH_pr<N>.json``, schema 1 — see
+``benchmarks/common.py write_json`` / ``benchmarks/run.py --json``).
+This tool parses the whole committed series, groups rows into
+``(bench, stage, case, unit)`` metric series, and flags the latest
+file's value when it is worse than **every** baseline (the last
+``--last`` prior files that measured the same series) by more than the
+noise band.  "Worse than all baselines" — not "worse than the best" —
+is what makes one lucky-fast historical run unable to fail CI forever.
+
+Direction comes from the unit: throughput-like units (MB/s, x,
+items/s) must not drop; time/size-like units (s, ms, ns/op, wall_s, B)
+must not grow.  Unitless or count-like series (workload constants such
+as ``reads``) carry no perf meaning and are skipped.  Noise bands are
+per-unit: generous for timing (scheduler jitter), tight for
+deterministic byte sizes.
+
+Exit status is the CI contract: 0 = no regression (or nothing
+comparable yet), 1 = regression beyond the band, 2 = usage error.
+
+    tools/benchdiff.py                          # whole committed series
+    tools/benchdiff.py --dir /tmp/bench --last 2 --band 0.5
+    tools/benchdiff.py --json                   # machine-readable report
+"""
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+# lower-is-better units and their relative noise bands
+_LOWER = {"s": 0.40, "ms": 0.40, "us": 0.40, "ns/op": 0.40,
+          "wall_s": 0.40, "B": 0.10, "MB": 0.10, "%": 0.40}
+# higher-is-better units
+_HIGHER = {"MB/s": 0.40, "GB/s": 0.40, "x": 0.25, "items/s": 0.40,
+           "ops/s": 0.40}
+# measured but direction-free (workload constants, identities): never judged
+_SKIP = {"", "reads", "count", "events", "baskets"}
+
+_PR_RE = re.compile(r"BENCH_pr(\d+)\.json$")
+
+
+def load_series(bench_dir: str):
+    """``({series_key: [(pr, value), ...]}, [pr, ...])`` from every
+    BENCH_pr*.json under ``bench_dir`` (prs ascending)."""
+    files = []
+    for path in glob.glob(os.path.join(bench_dir, "BENCH_pr*.json")):
+        m = _PR_RE.search(os.path.basename(path))
+        if m:
+            files.append((int(m.group(1)), path))
+    files.sort()
+    series: dict[tuple, list] = {}
+    for pr, path in files:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"benchdiff: unreadable {path}: {e}", file=sys.stderr)
+            continue
+        for bench, rows in (doc.get("benches") or {}).items():
+            for row in rows:
+                if not isinstance(row, dict):
+                    continue
+                stage = str(row.get("stage", ""))
+                case = str(row.get("case", ""))
+                unit = str(row.get("unit", ""))
+                # the primary value, and wall_s as its own timing series
+                for metric, u in (("value", unit), ("wall_s", "wall_s")):
+                    v = row.get(metric)
+                    if isinstance(v, bool) or not isinstance(v, (int, float)):
+                        continue
+                    key = (bench, stage, case, u if metric == "value"
+                           else "wall_s")
+                    series.setdefault(key, []).append((pr, float(v)))
+    return series, [pr for pr, _ in files]
+
+
+def judge(series: dict, prs: list, last: int, band_override=None):
+    """Compare each series' newest value against its baselines.
+
+    Returns ``(regressions, improvements, compared)`` — lists of report
+    dicts.  A series is judged only when the newest PR measured it and
+    at least one earlier PR did too."""
+    if not prs:
+        return [], [], []
+    newest = prs[-1]
+    regressions, improvements, compared = [], [], []
+    for key in sorted(series):
+        bench, stage, case, unit = key
+        if unit in _SKIP:
+            continue
+        if unit in _LOWER:
+            lower_better, band = True, _LOWER[unit]
+        elif unit in _HIGHER:
+            lower_better, band = False, _HIGHER[unit]
+        else:
+            continue        # unknown unit: no direction, no verdict
+        if band_override is not None:
+            band = band_override
+        points = series[key]
+        cur = [v for pr, v in points if pr == newest]
+        base = [(pr, v) for pr, v in points if pr != newest]
+        if not cur or not base:
+            continue
+        value = cur[-1]
+        base_prs = sorted({pr for pr, _ in base})[-last:]
+        baselines = [v for pr, v in base if pr in base_prs]
+        rep = {"series": f"{bench}/{stage}/{case}",
+               "unit": unit, "value": value,
+               "baselines": baselines, "band": band,
+               "vs_prs": base_prs, "pr": newest}
+        compared.append(rep)
+        if lower_better:
+            worst = max(baselines)
+            best = min(baselines)
+            if value > worst * (1.0 + band):
+                rep["delta"] = value / worst - 1.0
+                regressions.append(rep)
+            elif value < best * (1.0 - band):
+                rep["delta"] = value / best - 1.0
+                improvements.append(rep)
+        else:
+            worst = min(baselines)
+            best = max(baselines)
+            if value < worst * (1.0 - band):
+                rep["delta"] = value / worst - 1.0
+                regressions.append(rep)
+            elif value > best * (1.0 + band):
+                rep["delta"] = value / best - 1.0
+                improvements.append(rep)
+    return regressions, improvements, compared
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools/benchdiff.py",
+        description="perf-trajectory regression sentinel over "
+                    "artifacts/bench/BENCH_pr*.json")
+    default_dir = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "artifacts", "bench")
+    ap.add_argument("--dir", default=default_dir, metavar="DIR",
+                    help="directory of BENCH_pr*.json files")
+    ap.add_argument("--last", type=int, default=2, metavar="N",
+                    help="baseline files per series (default 2)")
+    ap.add_argument("--band", type=float, default=None, metavar="FRAC",
+                    help="override every per-unit noise band "
+                         "(e.g. 0.5 = 50%%)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable report")
+    args = ap.parse_args(argv)
+    if not os.path.isdir(args.dir):
+        print(f"benchdiff: no such directory: {args.dir}", file=sys.stderr)
+        return 2
+
+    series, prs = load_series(args.dir)
+    regressions, improvements, compared = judge(series, prs, args.last,
+                                                args.band)
+    if args.json:
+        json.dump({"prs": prs, "compared": len(compared),
+                   "regressions": regressions,
+                   "improvements": improvements}, sys.stdout, sort_keys=True)
+        print()
+        return 1 if regressions else 0
+
+    if not prs:
+        print("benchdiff: no BENCH_pr*.json files found — nothing to judge")
+        return 0
+    print(f"benchdiff: trajectory PR{prs[0]}..PR{prs[-1]} "
+          f"({len(series)} series, {len(compared)} comparable "
+          f"vs last {args.last})")
+    for rep in improvements:
+        print(f"  improved  {rep['series']} [{rep['unit']}]: "
+              f"{rep['value']:.4g} vs {rep['baselines']} "
+              f"({rep['delta']:+.0%})")
+    for rep in regressions:
+        print(f"  REGRESSED {rep['series']} [{rep['unit']}]: "
+              f"{rep['value']:.4g} vs {rep['baselines']} "
+              f"({rep['delta']:+.0%}, band {rep['band']:.0%})")
+    if regressions:
+        print(f"benchdiff: {len(regressions)} regression(s) beyond the "
+              f"noise band — failing")
+        return 1
+    print("benchdiff: no regressions beyond the noise band")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

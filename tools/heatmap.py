@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Access-heat query tool: rank branches/baskets by measured read heat.
+
+Reads either the durable ``<container>.heat`` sidecars a
+:class:`repro.remote.BasketServer` folds its telemetry into, or a live
+server's STATS view — the evidence the ROADMAP's background repacker
+consumes (DESIGN.md §16)::
+
+    tools/heatmap.py DIR                    # scan sidecars under DIR
+    tools/heatmap.py events.bskt.heat       # one sidecar
+    tools/heatmap.py HOST:PORT              # live server (STATS heat=true)
+    tools/heatmap.py DIR --top 5 --baskets  # per-basket detail
+    tools/heatmap.py DIR --json             # machine-readable
+
+Ranking is by decayed EWMA heat (recency-weighted), with cumulative
+reads as tiebreak — "hot now" first, "popular ever" second.
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs import heat as H  # noqa: E402
+
+
+def _collect_sidecars(target: str) -> dict[str, dict]:
+    """``{container_path: sidecar_doc}`` from a file or directory walk."""
+    docs = {}
+    if os.path.isfile(target):
+        doc = H.load_sidecar(target)
+        if doc is not None:
+            docs[target[:-len(H.SIDECAR_SUFFIX)]
+                 if target.endswith(H.SIDECAR_SUFFIX) else target] = doc
+        return docs
+    for dirpath, _dirs, files in os.walk(target):
+        for fn in files:
+            if not fn.endswith(H.SIDECAR_SUFFIX):
+                continue
+            p = os.path.join(dirpath, fn)
+            doc = H.load_sidecar(p)
+            if doc is not None:
+                docs[p[:-len(H.SIDECAR_SUFFIX)]] = doc
+    return docs
+
+
+def _collect_live(target: str) -> dict[str, dict]:
+    """Live STATS heat snapshot reshaped into sidecar-like docs."""
+    from repro.remote.client import fetch_stats
+    host, _, port = target.rpartition(":")
+    body = fetch_stats(host, int(port), heat=True)
+    docs = {}
+    for path, rec in (body.get("heat") or {}).items():
+        branches = {}
+        for branch, b in (rec.get("branches") or {}).items():
+            branches[branch] = {"reads": b.get("reads", 0),
+                                "bytes": b.get("bytes", 0),
+                                "heat": b.get("heat", 0.0),
+                                "t": None,  # already decayed server-side
+                                "baskets": b.get("baskets_hot") or {}}
+        docs[path] = {"version": 1,
+                      "halflife_s": rec.get("halflife_s", 3600.0),
+                      "branches": branches}
+    return docs
+
+
+def rank_all(docs: dict[str, dict]) -> list[dict]:
+    """Flatten to ``[{container, branch, heat, reads, bytes}, ...]``,
+    hottest first across every container."""
+    rows = []
+    for path, doc in docs.items():
+        live = any(rec.get("t") is None
+                   for rec in (doc.get("branches") or {}).values())
+        if live:    # STATS heat is already decayed to "now"
+            ranked = [(br, float(rec.get("heat", 0.0)),
+                       int(rec.get("reads", 0)), int(rec.get("bytes", 0)))
+                      for br, rec in doc["branches"].items()]
+            ranked.sort(key=lambda r: (-r[1], -r[2], r[0]))
+        else:
+            ranked = H.rank_branches(doc)
+        for branch, heat_now, reads, nbytes in ranked:
+            rows.append({"container": path, "branch": branch,
+                         "heat": heat_now, "reads": reads, "bytes": nbytes})
+    rows.sort(key=lambda r: (-r["heat"], -r["reads"], r["branch"]))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools/heatmap.py",
+        description="rank branches by persistent access heat")
+    ap.add_argument("target",
+                    help="directory of .heat sidecars, one sidecar file, "
+                         "or HOST:PORT of a live server")
+    ap.add_argument("--top", type=int, default=20, metavar="N",
+                    help="rows shown (default 20)")
+    ap.add_argument("--baskets", action="store_true",
+                    help="also show each branch's hottest baskets")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output (the repacker input)")
+    args = ap.parse_args(argv)
+
+    host, _, port = args.target.rpartition(":")
+    if host and port.isdigit() and not os.path.exists(args.target):
+        docs = _collect_live(args.target)
+    else:
+        docs = _collect_sidecars(args.target)
+    rows = rank_all(docs)
+
+    if args.json:
+        json.dump({"rows": rows[:args.top]}, sys.stdout, sort_keys=True)
+        print()
+        return 0
+    if not rows:
+        print("no heat telemetry found")
+        return 1
+    print(f"{'heat':>10}  {'reads':>8}  {'MB':>8}  branch  (container)")
+    for r in rows[:args.top]:
+        print(f"{r['heat']:>10.2f}  {r['reads']:>8}  "
+              f"{r['bytes'] / 1e6:>8.2f}  {r['branch']}  "
+              f"({os.path.basename(r['container'])})")
+        if args.baskets:
+            doc = docs.get(r["container"]) or {}
+            rec = (doc.get("branches") or {}).get(r["branch"]) or {}
+            hot = sorted((rec.get("baskets") or {}).items(),
+                         key=lambda kv: (-int(kv[1]), int(kv[0])))[:8]
+            if hot:
+                print("            baskets: "
+                      + " ".join(f"{k}:{v}" for k, v in hot))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
