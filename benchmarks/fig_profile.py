@@ -1,0 +1,275 @@
+"""Continuous-profiling benchmark: sampler overhead, hotspot
+attribution, crash flight recorder (DESIGN.md §17).
+
+Three stages, each answering "can the profiler + flight recorder run in
+production?":
+
+* **overhead** — a loopback READV workload (every basket of both
+  branches through ``fetch_wire``) with the sampling profiler on
+  (``DEFAULT_HZ``, RSS watermarks armed) vs off, interleaved same-phase
+  A/B so machine drift cancels, best-of-reps.  The CI gate holds the
+  profiled run within **3%** (+ a timer-jitter epsilon) of the
+  unprofiled run — a 67 Hz wall-clock sampler must be invisible at
+  wire granularity.
+
+* **hotspot** — a synthetic spin function burning CPU inside a root
+  span while the profiler samples at 250 Hz.  ``--check`` asserts the
+  spin function holds the **plurality of self samples** and that the
+  fold stacks attribute it to ``span:fig.hot`` — the two properties a
+  flamegraph is useless without.
+
+* **postmortem** — a subprocess installs the flight recorder and the
+  profiler, does real work (counter + span + spin), then dies on an
+  unhandled exception.  ``--check`` asserts the crash left a
+  ``repro-flight`` bundle carrying metrics, trace events, and profile
+  samples, and that ``tools/obstat.py --postmortem`` renders it —
+  the ISSUE-10 acceptance shape.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core.bfile import write_arrays
+from repro.core.codec import CompressionConfig
+from repro.remote import BasketServer, RemoteBasketFile
+
+from .common import emit
+
+MB = 1 << 20
+OVERHEAD_BUDGET = 0.03          # the CI gate: <3% on loopback READV
+ABS_EPS_S = 0.010               # timer-jitter floor for very fast runs
+HOT_MIN_SAMPLES = 5             # hotspot stage must actually sample
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the crashing workload for the postmortem stage: real spans, real
+# counters, real samples, then an unhandled exception
+_CRASH_SCRIPT = r"""
+import time
+from repro import obs
+obs.flight.install(interval_s=0.05)
+obs.profile.start(hz=200, mem="rss")
+c = obs.counter("fig.crash_work")
+with obs.trace.span("fig.doomed"):
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < 0.4:
+        for _ in range(1000):
+            c.inc()
+raise RuntimeError("fig_profile synthetic crash")
+"""
+
+
+def _bench_dir():
+    for d in ("/dev/shm", None):
+        if d is None or (os.path.isdir(d) and os.access(d, os.W_OK)):
+            return tempfile.TemporaryDirectory(dir=d, prefix="fig_prof_")
+
+
+def _write_events(td: str, size: int) -> str:
+    rng = np.random.default_rng(29)
+    path = os.path.join(td, "events.bskt")
+    write_arrays(path,
+                 {"energy": np.cumsum(rng.integers(1, 9, size // 8))
+                  .astype(np.int64),
+                  "pid": rng.integers(0, 100, size // 32).astype(np.int32)},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1, "delta8"),
+                 target_basket_bytes=64 * 1024)
+    return path
+
+
+def _read_all(rf: RemoteBasketFile, name: str) -> None:
+    nb = len(rf.branches[name]["baskets"])
+    rf.fetch_wire(name, list(range(nb)))
+
+
+def _overhead_rows(quick: bool) -> list[dict]:
+    reps = 3 if quick else 5
+    size = (4 if quick else 16) * MB
+    t_on = t_off = float("inf")
+    with _bench_dir() as td:
+        _write_events(td, size)
+        with BasketServer(td, workers=4, heat=False) as srv:
+            srv.start()
+            with RemoteBasketFile(srv.url("events.bskt"), wire=None,
+                                  batch_baskets=64) as rf:
+                _read_all(rf, "energy")         # warm conns + page cache
+                for _ in range(reps):
+                    # interleaved same-phase A/B: drift hits both arms
+                    t0 = time.perf_counter()
+                    _read_all(rf, "energy")
+                    _read_all(rf, "pid")
+                    t_off = min(t_off, time.perf_counter() - t0)
+                    obs.profile.start(hz=obs.profile.DEFAULT_HZ, mem="rss")
+                    t0 = time.perf_counter()
+                    _read_all(rf, "energy")
+                    _read_all(rf, "pid")
+                    t_on = min(t_on, time.perf_counter() - t0)
+                    obs.profile.stop()
+                    obs.profile.reset()     # bounded folds; keep arms equal
+                    obs.trace.clear()
+    pct = (t_on - t_off) / t_off * 100.0
+    rows = []
+    for case, t in [("profiler-off", t_off), ("profiler-on", t_on)]:
+        rows.append({"bench": "fig_profile", "stage": "overhead",
+                     "case": case, "wall_s": round(t, 4),
+                     "overhead_pct": round(pct, 2)
+                     if case == "profiler-on" else "",
+                     "value": "", "unit": ""})
+    return rows
+
+
+def _spin(n: int) -> int:
+    acc = 1
+    for _ in range(n):
+        acc = (acc * 1103515245 + 12345) & 0xFFFFFFFF
+    return acc
+
+
+def _hotspot_rows(quick: bool) -> list[dict]:
+    budget = 0.3 if quick else 0.8
+    obs.profile.reset()
+    obs.profile.start(hz=250)
+    try:
+        with obs.trace.span("fig.hot"):
+            t0 = time.perf_counter()
+            while time.perf_counter() - t0 < budget:
+                _spin(20000)
+    finally:
+        obs.profile.stop()
+    doc = obs.profile.drain()
+    self_c = obs.profile.self_counts(doc)
+    total = sum(self_c.values())
+    top, top_n = "", 0
+    if self_c:
+        top, top_n = max(self_c.items(), key=lambda kv: kv[1])
+    hot_ok = "_spin" in top
+    attr_ok = any(k.startswith("span:fig.hot;") and "_spin" in k
+                  for k in doc.get("folds", {}))
+    return [
+        {"bench": "fig_profile", "stage": "hotspot",
+         "case": "samples.self_total", "wall_s": "", "overhead_pct": "",
+         "value": total, "unit": "count"},
+        {"bench": "fig_profile", "stage": "hotspot",
+         "case": "hot.frame", "wall_s": "", "overhead_pct": "",
+         "value": top if hot_ok else f"WRONG:{top}", "unit": ""},
+        {"bench": "fig_profile", "stage": "hotspot",
+         "case": "hot.share_pct", "wall_s": "", "overhead_pct": "",
+         "value": round(top_n / total * 100.0, 1) if total else 0,
+         "unit": "count"},
+        {"bench": "fig_profile", "stage": "hotspot",
+         "case": "span.attributed", "wall_s": "", "overhead_pct": "",
+         "value": "ok" if attr_ok else "MISSING", "unit": ""},
+    ]
+
+
+def _postmortem_rows(quick: bool) -> list[dict]:
+    rows = []
+    with _bench_dir() as td:
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(_ROOT, "src"),
+                   REPRO_FLIGHT_DIR=td)
+        env.pop("REPRO_OBS", None)
+        proc = subprocess.run([sys.executable, "-c", _CRASH_SCRIPT],
+                              env=env, cwd=td, capture_output=True,
+                              text=True, timeout=120)
+        bundles = sorted(glob.glob(os.path.join(td, "*.json")))
+        crash_ok = proc.returncode != 0 and len(bundles) == 1
+        sections_ok = render_ok = False
+        if bundles:
+            doc = obs.flight.load_bundle(bundles[0])
+            m = doc.get("final_metrics") or {}
+            sections_ok = (
+                doc.get("kind") == obs.flight.BUNDLE_KIND
+                and (m.get("counters") or {}).get("fig.crash_work", 0) > 0
+                and any(e.get("name") == "fig.doomed"
+                        for e in doc.get("trace_events") or [])
+                and (doc.get("profile") or {}).get("samples", 0) > 0
+                and (doc.get("exception") or {}).get("type") == "RuntimeError")
+            view = subprocess.run(
+                [sys.executable, os.path.join(_ROOT, "tools", "obstat.py"),
+                 "--postmortem", bundles[0]],
+                env=env, capture_output=True, text=True, timeout=120)
+            render_ok = (view.returncode == 0
+                         and "RuntimeError" in view.stdout
+                         and "fig_profile synthetic crash" in view.stdout)
+    for case, ok in [("crash.bundle_written", crash_ok),
+                     ("bundle.sections", sections_ok),
+                     ("obstat.postmortem", render_ok)]:
+        rows.append({"bench": "fig_profile", "stage": "postmortem",
+                     "case": case, "wall_s": "", "overhead_pct": "",
+                     "value": "ok" if ok else "MISSING", "unit": ""})
+    return rows
+
+
+def run(out_csv: str | None = None, quick: bool = False) -> list[dict]:
+    rows = (_overhead_rows(quick) + _hotspot_rows(quick)
+            + _postmortem_rows(quick))
+    emit(rows, out_csv)
+    return rows
+
+
+def check(rows: list[dict]) -> int:
+    """CI perf-smoke gate (see module docstring)."""
+    ok = True
+
+    def fail(msg):
+        nonlocal ok
+        print(f"FAIL: {msg}", file=sys.stderr)
+        ok = False
+
+    over = {r["case"]: r for r in rows if r["stage"] == "overhead"}
+    if "profiler-on" not in over or "profiler-off" not in over:
+        fail("missing overhead rows")
+    else:
+        t_on = over["profiler-on"]["wall_s"]
+        t_off = over["profiler-off"]["wall_s"]
+        if t_on > t_off * (1.0 + OVERHEAD_BUDGET) + ABS_EPS_S:
+            fail(f"profiler overhead "
+                 f"{over['profiler-on']['overhead_pct']}% exceeds the "
+                 f"{OVERHEAD_BUDGET:.0%} budget (on={t_on}s off={t_off}s)")
+    hot = {r["case"]: r for r in rows if r["stage"] == "hotspot"}
+    n = int(hot.get("samples.self_total", {}).get("value") or 0)
+    if n < HOT_MIN_SAMPLES:
+        fail(f"hotspot stage captured only {n} samples "
+             f"(want ≥ {HOT_MIN_SAMPLES})")
+    frame = str(hot.get("hot.frame", {}).get("value") or "")
+    if "_spin" not in frame or frame.startswith("WRONG:"):
+        fail(f"hot function not the top self-time frame: {frame!r}")
+    if hot.get("span.attributed", {}).get("value") != "ok":
+        fail("no fold stack attributed the hot function to span:fig.hot")
+    for case in ("crash.bundle_written", "bundle.sections",
+                 "obstat.postmortem"):
+        row = next((r for r in rows if r["case"] == case), None)
+        if row is None or row["value"] != "ok":
+            fail(f"postmortem stage: {case} failed")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller containers, fewer repeats")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless profiler overhead is "
+                         "within budget, the synthetic hot function "
+                         "dominates self samples under its span, and a "
+                         "crashed worker leaves a flight bundle obstat "
+                         "can render (CI perf-smoke)")
+    ap.add_argument("--out", default="artifacts/bench/fig_profile.csv")
+    args = ap.parse_args(argv)
+    rows = run(args.out, quick=args.quick)
+    return check(rows) if args.check else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

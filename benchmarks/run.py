@@ -21,8 +21,8 @@ import time
 
 from . import (fig2_survey, fig3_decompression, fig45_cfzlib, fig6_precond,
                fig_dict, fig_entropy, fig_fault, fig_heal, fig_obs,
-               fig_obs2, fig_parallel, fig_remote, fig_tune, fig_zerocopy,
-               pipeline_tput, roofline)
+               fig_obs2, fig_parallel, fig_profile, fig_remote, fig_tune,
+               fig_zerocopy, pipeline_tput, roofline)
 
 BENCHES = {
     "fig2": fig2_survey,
@@ -36,6 +36,7 @@ BENCHES = {
     "fig_obs": fig_obs,
     "fig_obs2": fig_obs2,
     "fig_parallel": fig_parallel,
+    "fig_profile": fig_profile,
     "fig_remote": fig_remote,
     "fig_tune": fig_tune,
     "fig_zerocopy": fig_zerocopy,

@@ -232,6 +232,7 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     if producers <= 1:
         with obs.trace.span("ckpt.save", cat="ckpt", path=path,
                             branches=len(flat)), \
+                obs.profile.mem_phase("ckpt.save"), \
                 BasketWriter(path, workers=workers, tuner=tuner,
                              parity=parity) as w:
             unlend = lend_engine(w._engine)
@@ -257,6 +258,7 @@ def save_pytree(path: str, tree, profile: str = "checkpoint",
     lock = threading.Lock()
     with obs.trace.span("ckpt.save", cat="ckpt", path=path,
                         branches=len(flat)), \
+            obs.profile.mem_phase("ckpt.save"), \
             BufferMerger(path, workers=workers, tuner=tuner,
                          parity=parity) as m:
         unlend = lend_engine(m._engine)
@@ -315,6 +317,7 @@ def load_pytree(path: str, template=None, shardings=None, workers: int = 4,
     flat_s = _flatten_with_paths(shardings) if shardings is not None else {}
     t0 = time.perf_counter()
     with obs.trace.span("ckpt.load", cat="ckpt", path=path), \
+            obs.profile.mem_phase("ckpt.load"), \
             BasketFile(path, workers=workers, prefetch=prefetch,
                        heal=heal) as f:
         meta = json.loads(bytes(f.read_branch("__meta__")).decode())

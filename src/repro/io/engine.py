@@ -100,7 +100,8 @@ def _obs_pack(raw, cfg, start: int, count: int, tp=None):
     the task: thread workers hit the parent registry directly; process
     workers hit their own, folded back by :meth:`CompressionEngine.collect_obs`."""
     t0 = time.perf_counter()
-    with _task_span("engine.pack", tp, algo=cfg.algo):
+    with _task_span("engine.pack", tp, algo=cfg.algo), \
+            obs.profile.mem_phase("engine.pack"):
         payload, meta = _basket.pack_basket(raw, cfg, entry_start=start,
                                             entry_count=count)
     obs.histogram("engine.pack_s", algo=cfg.algo).observe(
@@ -203,7 +204,8 @@ def _unpack_task(path: str, offset: int, meta_json: dict,
                  dictionary: Optional[bytes], verify: bool,
                  ident: Optional[tuple] = None, tp=None) -> bytes:
     meta = _basket.BasketMeta.from_json(meta_json)
-    with _task_span("engine.unpack", tp, algo=meta.algo):
+    with _task_span("engine.unpack", tp, algo=meta.algo), \
+            obs.profile.mem_phase("engine.unpack"):
         payload = _fdcache.pread(path, offset, meta.comp_len, expect=ident)
         t0 = time.perf_counter()
         raw = _basket.unpack_basket(payload, meta, dictionary, verify=verify)
@@ -254,14 +256,29 @@ def _warm_task(delay: float = 0.0):
 
 def _obs_snapshot_task(delay: float = 0.0):
     """Worker body for telemetry folding: each process worker returns (and
-    zeroes) its own registry's delta snapshot plus its drained trace ring,
-    so worker spans are not lost at the pool boundary.  The sleep is the
-    warmup trick — N sleeping tasks for N workers means one eager worker
-    can't answer them all, so every worker gets drained."""
+    zeroes) its own registry's delta snapshot plus its drained trace ring
+    and profile folds, so worker spans/samples are not lost at the pool
+    boundary.  The sleep is the warmup trick — N sleeping tasks for N
+    workers means one eager worker can't answer them all, so every worker
+    gets drained."""
     if delay:
         time.sleep(delay)
     return {"metrics": obs.snapshot(reset=True),
-            "trace": obs.trace.drain()}
+            "trace": obs.trace.drain(),
+            "profile": obs.profile.drain()}
+
+
+def _prof_ctl_task(action: str, hz: float, mem, delay: float = 0.0):
+    """Worker body for profiler control: start/stop the sampling profiler
+    *inside* a process-pool worker, so a pool workload's flamegraph
+    includes worker stacks (folded back by ``_obs_snapshot_task``).  Same
+    sleeping-warmup trick — every worker must be reached."""
+    if delay:
+        time.sleep(delay)
+    if action == "start":
+        return obs.profile.start(hz=hz, mem=mem)
+    obs.profile.stop()
+    return True
 
 
 def _completed_future(fn, *args) -> Future:
@@ -438,9 +455,42 @@ class CompressionEngine:
                 if isinstance(got, dict) and "metrics" in got:
                     obs.merge(got["metrics"])
                     obs.trace.ingest(got.get("trace") or [])
+                    obs.profile.ingest(got.get("profile"))
                 else:       # a worker running the pre-v2 task body
                     obs.merge(got)
         except Exception:   # broken pool at teardown: telemetry is advisory
+            pass
+
+    def profile_workers(self, action: str = "start",
+                        hz: float = 0.0, mem=False,
+                        delay: float = 0.05) -> None:
+        """Start or stop the sampling profiler inside every process-pool
+        worker (thread workers already share the parent's profiler).  The
+        workers' samples fold back on :meth:`collect_obs` / ``close()``.
+
+        ``"start"`` spawns the process pool if it doesn't exist yet —
+        the pool is otherwise lazy (first pure-python pack), and the
+        natural call order is "arm the profiler, then run the workload",
+        which would silently profile nothing against a not-yet-spawned
+        pool.  ``"stop"`` against no pool is a no-op, as is everything
+        when obs is disabled or ``workers == 0``."""
+        if not obs.enabled() or self.workers == 0:
+            return
+        with self._lock:
+            if self._closed:
+                return
+            if self._proc_pool is None:
+                if action != "start":
+                    return
+                self._proc_pool = self._spawn_process_pool()
+            pool = self._proc_pool
+        hz = hz or obs.profile.DEFAULT_HZ
+        try:
+            futs = [pool.submit(_prof_ctl_task, action, hz, mem, delay)
+                    for _ in range(self.workers)]
+            for f in futs:
+                f.result()
+        except Exception:   # broken pool at teardown: profiling is advisory
             pass
 
     def close(self) -> None:

@@ -6,8 +6,11 @@ span tracing with Chrome trace-event export and cross-process
 traceparent propagation (:mod:`repro.obs.trace`,
 :mod:`repro.obs.context`), a persistent access-heat log
 (:mod:`repro.obs.heat`), rolling-window SLOs (:mod:`repro.obs.slo`),
-and an RBSP ``STATS`` view served by :class:`repro.remote.BasketServer`
-and read by ``python -m repro.obs`` / ``tools/obstat.py``.
+a continuous sampling profiler with span-attributed flamegraphs and
+memory watermarks (:mod:`repro.obs.profile`), a crash flight recorder
+(:mod:`repro.obs.flight`), and RBSP ``STATS``/``PROF`` views served by
+:class:`repro.remote.BasketServer` and read by ``python -m repro.obs``
+/ ``tools/obstat.py``.
 
 Call-site idiom — acquire the instrument *per event* through the helpers
 here, so the ``REPRO_OBS`` gate (env at import, runtime via
@@ -29,7 +32,7 @@ quick run within 2% of the disabled run.
 
 from __future__ import annotations
 
-from repro.obs import context, metrics, trace
+from repro.obs import context, flight, metrics, profile, trace
 from repro.obs.metrics import (
     NULL, REGISTRY, Registry,
     enabled, set_enabled, format_key, parse_key, quantile_from_buckets,
@@ -37,7 +40,8 @@ from repro.obs.metrics import (
 )
 
 __all__ = [
-    "metrics", "trace", "context", "REGISTRY", "Registry", "NULL",
+    "metrics", "trace", "context", "profile", "flight",
+    "REGISTRY", "Registry", "NULL",
     "counter", "gauge", "histogram", "snapshot", "merge",
     "enabled", "set_enabled", "format_key", "parse_key",
     "quantile_from_buckets", "exemplar_for_quantile",

@@ -1,7 +1,7 @@
 """obstat — the observability CLI (``python -m repro.obs``).
 
-Three modes against a live :class:`repro.remote.BasketServer` (all over
-the RBSP ``STATS`` verb — no container path needed, just host:port):
+Modes against a live :class:`repro.remote.BasketServer` (over the RBSP
+``STATS``/``PROF`` verbs — no container path needed, just host:port):
 
 one-shot dump (default)::
 
@@ -16,9 +16,21 @@ trace capture window (drain, wait, drain -> Chrome trace JSON)::
 
     python -m repro.obs HOST:PORT --trace out.json [--duration 5]
 
+continuous profiling (DESIGN.md §17; ``capture`` = start, wait
+``--duration``, fetch, stop — one-shot flamegraph)::
+
+    python -m repro.obs HOST:PORT --prof capture --prof-out flame.folded
+    python -m repro.obs HOST:PORT --prof start [--hz 67] [--mem]
+    python -m repro.obs HOST:PORT --prof fetch --prof-out prof.speedscope.json
+    python -m repro.obs HOST:PORT --prof stop
+
 stitch multi-process captures into one timeline (DESIGN.md §16)::
 
     python -m repro.obs --stitch merged.json client.json server.json
+
+render a crash flight-recorder bundle (no target needed)::
+
+    python -m repro.obs --postmortem artifacts/flight/flight-123.json
 
 Without a target, the one-shot mode dumps *this* process's registry —
 mostly useful under ``python -m repro.obs --json`` in scripts and tests.
@@ -31,7 +43,7 @@ import json
 import sys
 import time
 
-from repro.obs import REGISTRY, metrics, trace
+from repro.obs import REGISTRY, metrics, profile, trace
 
 # what --watch renders: poll only these prefixes instead of shipping the
 # whole registry each tick (the STATS "filter" key; bare polls unchanged)
@@ -45,10 +57,12 @@ def _parse_target(target: str) -> tuple[str, int]:
     return host, int(port)
 
 
-def _fetch(target: str, want_trace: bool = False, filter=None) -> dict:
+def _fetch(target: str, want_trace: bool = False, filter=None,
+           want_profile: bool = False) -> dict:
     from repro.remote.client import fetch_stats
     host, port = _parse_target(target)
-    return fetch_stats(host, port, trace=want_trace, filter=filter)
+    return fetch_stats(host, port, trace=want_trace, filter=filter,
+                       profile=want_profile)
 
 
 def _hist_stats(h: dict) -> tuple[int, float, float, float]:
@@ -127,8 +141,24 @@ def repair_rows(counters: dict, prev: dict) -> list[tuple[str, int, int]]:
     return rows
 
 
+def profiler_rows(prof: dict, prev_prof: dict,
+                  top: int) -> list[tuple[str, int, int]]:
+    """Top-N functions by *self*-sample delta this tick (total self
+    samples breaks ties) from the STATS ``profile.self`` table —
+    ``[(function, delta, total), ...]``.  Empty when the profiler is off
+    or has no samples, so the section hides like faults/self-healing."""
+    if not prof or not prof.get("active"):
+        return []
+    cur = prof.get("self") or {}
+    prev = (prev_prof or {}).get("self") or {}
+    rows = [(fn, int(total) - int(prev.get(fn, 0)), int(total))
+            for fn, total in cur.items()]
+    rows.sort(key=lambda r: (-r[1], -r[2], r[0]))
+    return rows[:top]
+
+
 def _render_watch(snap: dict, prev_snap: dict, body: dict, top: int,
-                  interval: float) -> str:
+                  interval: float, prev_prof: dict = {}) -> str:
     lines = [f"repro.obs watch — gen {body.get('gen')} pid {body.get('pid')} "
              f"uptime {body.get('uptime_s', 0.0):.0f}s "
              f"(tick {interval:g}s)"]
@@ -178,6 +208,14 @@ def _render_watch(snap: dict, prev_snap: dict, body: dict, top: int,
         any_verb = True
     if not any_verb:
         lines.append("    (no requests yet)")
+    prof = body.get("profile") or {}
+    prows = profiler_rows(prof, prev_prof, top)
+    if prows:
+        lines.append("")
+        lines.append(f"  profiler (self samples/tick, {prof.get('hz', 0):g} Hz, "
+                     f"{prof.get('samples', 0)} total):")
+        for fn, delta, total in prows:
+            lines.append(f"    {fn:<56} +{delta:<8} total {total}")
     slo = body.get("slo")
     if slo:
         lines.append("")
@@ -194,6 +232,94 @@ def _render_watch(snap: dict, prev_snap: dict, body: dict, top: int,
             parts.append(f"span={v.get('span_s', 0.0):.1f}s")
             lines.append(" ".join(parts))
     return "\n".join(lines)
+
+
+def _render_postmortem(doc: dict) -> str:
+    """Human-readable view of a flight-recorder bundle (DESIGN.md §17)."""
+    lines = [f"repro flight recorder — {doc.get('reason', '?')}",
+             f"  pid {doc.get('pid')}  ts {doc.get('ts', 0.0):.3f}  "
+             f"argv {' '.join(doc.get('argv') or []) or '?'}"]
+    exc = doc.get("exception")
+    if exc:
+        lines.append("")
+        lines.append(f"  exception: {exc.get('type')}: {exc.get('message')}")
+        for ln in "".join(exc.get("traceback") or []).rstrip().splitlines():
+            lines.append(f"    {ln}")
+    threads = doc.get("threads") or []
+    if threads:
+        lines.append("")
+        lines.append(f"  threads at death ({len(threads)}):")
+        for t in threads:
+            span = f"  span={t['span']}" if t.get("span") else ""
+            tid = f" trace={t['trace_id'][:12]}" if t.get("trace_id") else ""
+            lines.append(f"    {t.get('name', '?')}{span}{tid}")
+            tail = (t.get("stack") or [])[-2:]
+            for frame in "".join(tail).rstrip().splitlines():
+                lines.append(f"      {frame.strip()}")
+    prof = doc.get("profile") or {}
+    selfs = sorted(profile.self_counts(prof).items(),
+                   key=lambda kv: -kv[1])[:10]
+    if selfs:
+        lines.append("")
+        lines.append(f"  profile ({prof.get('samples', 0)} samples, "
+                     f"top self):")
+        for fn, n in selfs:
+            lines.append(f"    {fn:<56} {n}")
+    marks = doc.get("watermarks") or {}
+    if marks:
+        lines.append("")
+        lines.append("  memory watermarks:")
+        for phase, w in sorted(marks.items()):
+            lines.append(f"    {phase:<24} peak {w.get('peak_bytes', 0):>12} B"
+                         f"  x{w.get('count', 0)} ({w.get('src', '?')})")
+    slo = doc.get("slo")
+    if slo:
+        lines.append("")
+        lines.append("  SLO verdicts at death:")
+        for v in slo:
+            status = "OK " if v.get("ok") else "VIOLATED"
+            lines.append(f"    {v.get('name', '?'):<20} {status}")
+    n_snap = len(doc.get("snapshots") or [])
+    n_ev = len(doc.get("trace_events") or [])
+    counters = (doc.get("final_metrics") or {}).get("counters") or {}
+    lines.append("")
+    lines.append(f"  ring: {n_snap} metric snapshots, {n_ev} trace events, "
+                 f"{len(counters)} counters at death")
+    return "\n".join(lines)
+
+
+def _run_prof(target: str, action: str, hz: float, mem: bool,
+              duration: float, out: str | None) -> int:
+    """The --prof mode: drive a live server's sampling profiler over the
+    PROF verb.  ``capture`` is the one-shot flamegraph: start, sample for
+    ``duration``, fetch+reset, stop, export."""
+    from repro.remote.client import request_prof
+    host, port = _parse_target(target)
+    kw = {"hz": hz or None, "mem": mem}
+    if action == "capture":
+        request_prof(host, port, action="start", **kw)
+        time.sleep(duration)
+        body = request_prof(host, port, action="fetch", reset=True)
+        request_prof(host, port, action="stop")
+    elif action == "fetch":
+        body = request_prof(host, port, action="fetch")
+    elif action in ("start", "stop", "status"):
+        body = request_prof(host, port, action=action, **kw)
+        print(json.dumps(body.get("profile") or body, sort_keys=True))
+        return 0
+    else:
+        raise SystemExit(f"unknown --prof action {action!r}")
+    doc = body.get("profile") or {}
+    if out:
+        if out.endswith(".json"):
+            profile.write_speedscope(out, doc, name=target)
+        else:
+            profile.write_collapsed(out, doc)
+        print(f"wrote {doc.get('samples', 0)} samples "
+              f"({len(doc.get('folds') or {})} stacks) to {out}")
+    else:
+        sys.stdout.write(profile.collapsed(doc))
+    return 0
 
 
 def main(argv=None) -> int:
@@ -221,7 +347,39 @@ def main(argv=None) -> int:
     ap.add_argument("--stitch", nargs="+", metavar="JSON", default=None,
                     help="OUT.json CAPTURE.json [CAPTURE.json ...]: merge "
                          "per-process Chrome captures into one timeline")
+    ap.add_argument("--prof", metavar="ACTION", default=None,
+                    choices=["start", "stop", "status", "fetch", "capture"],
+                    help="drive the server's sampling profiler over the "
+                         "PROF verb (capture = start/wait --duration/"
+                         "fetch/stop)")
+    ap.add_argument("--hz", type=float, default=0.0,
+                    help="--prof start/capture sample rate "
+                         "(default: server default)")
+    ap.add_argument("--mem", action="store_true",
+                    help="--prof start/capture: arm memory watermarks")
+    ap.add_argument("--prof-out", metavar="OUT", default=None,
+                    help="--prof fetch/capture output (*.json = speedscope, "
+                         "else collapsed stacks; default: stdout)")
+    ap.add_argument("--postmortem", metavar="BUNDLE.json", default=None,
+                    help="render a crash flight-recorder bundle "
+                         "(--json dumps it raw)")
     args = ap.parse_args(argv)
+
+    if args.postmortem is not None:
+        from repro.obs import flight
+        doc = flight.load_bundle(args.postmortem)
+        if args.json:
+            json.dump(doc, sys.stdout, sort_keys=True)
+            print()
+        else:
+            print(_render_postmortem(doc))
+        return 0
+
+    if args.prof is not None:
+        if args.target is None:
+            ap.error("--prof needs a HOST:PORT target")
+        return _run_prof(args.target, args.prof, args.hz, args.mem,
+                         args.duration, args.prof_out)
 
     if args.stitch is not None:
         if len(args.stitch) < 2:
@@ -254,17 +412,21 @@ def main(argv=None) -> int:
         if args.target is None:
             ap.error("--watch needs a HOST:PORT target")
         prev: dict = {}
+        prev_prof: dict = {}
         tick = 0
         try:
             while True:
-                body = _fetch(args.target, filter=WATCH_PREFIXES)
+                body = _fetch(args.target, filter=WATCH_PREFIXES,
+                              want_profile=True)
                 snap = body.get("metrics") or {}
-                out = _render_watch(snap, prev, body, args.top, args.interval)
+                out = _render_watch(snap, prev, body, args.top,
+                                    args.interval, prev_prof)
                 # ANSI clear+home when interactive; plain append otherwise
                 if sys.stdout.isatty():
                     sys.stdout.write("\x1b[2J\x1b[H")
                 print(out, flush=True)
                 prev = snap
+                prev_prof = body.get("profile") or {}
                 tick += 1
                 if args.count and tick >= args.count:
                     return 0

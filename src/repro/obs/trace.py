@@ -43,6 +43,7 @@ from typing import Optional
 
 from repro.obs import context as _context
 from repro.obs import metrics as _metrics
+from repro.obs import profile as _profile
 
 __all__ = ["span", "instant", "drain", "events", "export_chrome",
            "set_capacity", "clear", "ingest", "stitch", "build_tree"]
@@ -92,7 +93,7 @@ def _append(ev: dict) -> None:
 
 
 class _Span:
-    __slots__ = ("name", "cat", "args", "_t0", "_ctx", "_parent")
+    __slots__ = ("name", "cat", "args", "_t0", "_ctx", "_parent", "_prof")
 
     def __init__(self, name: str, cat: str, args: dict, root: bool):
         self.name = name
@@ -113,11 +114,22 @@ class _Span:
     def __enter__(self):
         if self._ctx is not None:
             _context.push(self._ctx)
+        # span-attributed profiling (§17): while the sampler runs, register
+        # this span on the thread so samples carry a span:<name> root frame.
+        # The flag is latched per span — a profiler started mid-span must
+        # not pop what was never pushed.
+        self._prof = _profile._ACTIVE
+        if self._prof:
+            _profile.note_push(
+                self.name,
+                self._ctx.trace_id if self._ctx is not None else "")
         self._t0 = _now_us()
         return self
 
     def __exit__(self, exc_type, exc, tb):
         t1 = _now_us()
+        if self._prof:
+            _profile.note_pop()
         if self._ctx is not None:
             _context.pop()
         if exc_type is not None:

@@ -68,7 +68,7 @@ from .errors import (RemoteConnectError, RemoteServerError, RemoteTimeout,
 from .transcode import DEFAULT_ACCEPT
 
 __all__ = ["RemoteBasketFile", "EndpointPool", "connect", "fetch_stats",
-           "fetch_catalog", "request_scrub"]
+           "fetch_catalog", "request_scrub", "request_prof"]
 
 # transport-level failures worth a retry (reads are idempotent); server
 # application errors (RemoteServerError) deliberately excluded
@@ -83,15 +83,18 @@ def connect(url: str, **kw) -> "RemoteBasketFile":
 
 def fetch_stats(host: str, port: int, *, trace: bool = False,
                 filter: Union[None, str, Sequence[str]] = None,
-                heat: bool = False, timeout: float = 10.0) -> dict:
+                heat: bool = False, profile: bool = False,
+                timeout: float = 10.0) -> dict:
     """One STATS round-trip against a bare ``host:port`` — no catalog, no
     container path, so a monitor (``python -m repro.obs``) can poll any
     live server without knowing what it exports.
 
     ``filter`` is a metric-name prefix (or list of prefixes) applied
     server-side so a poller ships only the slice it renders; ``heat=True``
-    also requests the server's access-heat snapshot.  A bare poll (no
-    kwargs) sends the same empty body as always."""
+    also requests the server's access-heat snapshot; ``profile=True``
+    requests the profiler's status + per-function self counts (the
+    ``--watch`` profiler section — the full fold table ships over PROF).
+    A bare poll (no kwargs) sends the same empty body as always."""
     conn = _Conn(host, int(port), timeout)
     try:
         body: dict = {}
@@ -102,6 +105,8 @@ def fetch_stats(host: str, port: int, *, trace: bool = False,
                 else list(filter)
         if heat:
             body["heat"] = True
+        if profile:
+            body["profile"] = True
         tp = obs.context.current_traceparent()
         if tp:
             body["tp"] = tp
@@ -153,6 +158,25 @@ def request_scrub(host: str, port: int, *, action: str = "status",
     if path is not None:
         body["path"] = str(path)
     return _one_shot(host, port, P.REQ_SCRUB, body, P.RESP_SCRUB, timeout)
+
+
+def request_prof(host: str, port: int, *, action: str = "status",
+                 hz: Optional[float] = None, mem=False, reset: bool = False,
+                 timeout: float = 30.0) -> dict:
+    """One PROF round-trip: ``action`` is ``start`` (``hz`` sets the
+    sample rate, ``mem`` arms memory watermarks) / ``stop`` / ``status``
+    / ``fetch`` (``reset=True`` drains the server's fold table, so
+    successive fetches cover disjoint windows).  A ``fetch`` returns the
+    profile document under ``"profile"`` — feed it to
+    :func:`repro.obs.profile.collapsed` / :func:`~repro.obs.profile.speedscope`."""
+    body: dict = {"action": action}
+    if hz is not None:
+        body["hz"] = float(hz)
+    if mem:
+        body["mem"] = mem if isinstance(mem, str) else True
+    if reset:
+        body["reset"] = True
+    return _one_shot(host, port, P.REQ_PROF, body, P.RESP_PROF, timeout)
 
 
 def _as_endpoint(ep) -> tuple[str, int]:

@@ -28,6 +28,10 @@ Frame types::
     REQ_SCRUB     {"action": "status"}                   -> RESP_SCRUB
                   | {"action": "trigger"}
                   | {"action": "scrub", "path"?}
+    REQ_PROF      {"action": "status"}                   -> RESP_PROF
+                  | {"action": "start", "hz"?, "mem"?}
+                  | {"action": "stop"}
+                  | {"action": "fetch", "reset"?}
     RESP_ERROR    {"error"}   (any request may answer this)
     RESP_BUSY     {"error": "busy", "retry_after_s"}
                   (load shedding: the server's admission queue is
@@ -38,6 +42,13 @@ answers with a generation-stamped canonical-JSON snapshot of its obs
 registry plus the per-server ``stats`` dict — no path required, so a
 monitor can point at a bare host:port.  ``"trace": true`` additionally
 drains the server's span ring into ``"trace_events"``.
+
+``REQ_PROF`` is the continuous-profiling control verb (DESIGN.md §17):
+``start``/``stop`` manage the server's sampling profiler (``hz`` sets
+the sample rate, ``mem`` arms memory watermarks), ``status`` reports it,
+and ``fetch`` ships the collapsed-stack fold table (``reset: true``
+drains it, so successive fetches cover disjoint windows) — the
+``obstat --prof`` flamegraph capture path.
 
 ``REQ_SCRUB`` is the self-healing control verb (DESIGN.md §15):
 ``status`` snapshots the server's background scrubber, ``trigger`` wakes
@@ -63,8 +74,9 @@ from repro.core.checksum import adler32_hw
 __all__ = [
     "MAGIC", "ProtocolError",
     "REQ_CATALOG", "REQ_READV", "REQ_PING", "REQ_STATS", "REQ_SCRUB",
+    "REQ_PROF",
     "RESP_CATALOG", "RESP_READV", "RESP_PING", "RESP_STATS", "RESP_SCRUB",
-    "RESP_BUSY", "RESP_ERROR",
+    "RESP_PROF", "RESP_BUSY", "RESP_ERROR",
     "VERB_NAMES",
     "pack_frame", "read_frame", "recv_exact",
     "coalesce", "parse_url", "format_url",
@@ -79,22 +91,25 @@ REQ_READV = 2
 REQ_PING = 3
 REQ_STATS = 4
 REQ_SCRUB = 5
+REQ_PROF = 6
 # response types
 RESP_CATALOG = 16
 RESP_READV = 17
 RESP_PING = 18
 RESP_STATS = 19
 RESP_SCRUB = 20
+RESP_PROF = 21
 RESP_BUSY = 30
 RESP_ERROR = 31
 
-_TYPES = {REQ_CATALOG, REQ_READV, REQ_PING, REQ_STATS, REQ_SCRUB,
+_TYPES = {REQ_CATALOG, REQ_READV, REQ_PING, REQ_STATS, REQ_SCRUB, REQ_PROF,
           RESP_CATALOG, RESP_READV, RESP_PING, RESP_STATS, RESP_SCRUB,
-          RESP_BUSY, RESP_ERROR}
+          RESP_PROF, RESP_BUSY, RESP_ERROR}
 
 # human-readable verb names for metric labels and error log lines
 VERB_NAMES = {REQ_CATALOG: "catalog", REQ_READV: "readv",
-              REQ_PING: "ping", REQ_STATS: "stats", REQ_SCRUB: "scrub"}
+              REQ_PING: "ping", REQ_STATS: "stats", REQ_SCRUB: "scrub",
+              REQ_PROF: "prof"}
 
 # sanity bounds: a malformed header must fail fast, not allocate gigabytes
 MAX_BODY = 64 << 20

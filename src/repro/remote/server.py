@@ -145,6 +145,8 @@ class _Handler(socketserver.StreamRequestHandler):
                         self._reply(P.RESP_STATS, srv._stats_body(body))
                     elif ftype == P.REQ_SCRUB:
                         self._reply(P.RESP_SCRUB, srv._scrub_body(body))
+                    elif ftype == P.REQ_PROF:
+                        self._reply(P.RESP_PROF, srv._prof_body(body))
                     else:
                         self._reply(P.RESP_ERROR,
                                     {"error": f"unexpected frame type {ftype}"})
@@ -487,7 +489,39 @@ class BasketServer:
             out["heat"] = self.heatlog.snapshot()
         if body.get("trace"):
             out["trace_events"] = obs.trace.drain()
+        if body.get("profile"):
+            # the --watch profiler section's input: status + per-function
+            # self counts, never the full fold table (that is PROF fetch)
+            pstat = obs.profile.status()
+            pstat["self"] = obs.profile.self_counts()
+            out["profile"] = pstat
         return out
+
+    # -- continuous profiling control (PROF verb) ------------------------
+
+    def _prof_body(self, body: dict) -> dict:
+        """The ``PROF`` verb (DESIGN.md §17): ``start``/``stop`` manage
+        this process's sampling profiler, ``status`` reports it, and
+        ``fetch`` ships the profile document (fold table + span trace ids
+        + memory watermarks; ``reset: true`` drains, so successive fetches
+        cover disjoint windows)."""
+        action = body.get("action", "status")
+        if action == "start":
+            hz = float(body.get("hz") or obs.profile.DEFAULT_HZ)
+            started = obs.profile.start(hz=hz, mem=body.get("mem") or False)
+            return {"started": started, "profile": obs.profile.status()}
+        if action == "stop":
+            obs.profile.stop()
+            return {"stopped": True, "profile": obs.profile.status()}
+        if action == "status":
+            return {"profile": obs.profile.status()}
+        if action == "fetch":
+            # fold the pool workers' samples in first so a remote
+            # flamegraph includes process-pool stacks, like collect_obs
+            self.engine.collect_obs()
+            return {"profile": obs.profile.snapshot(
+                reset=bool(body.get("reset")))}
+        raise ValueError(f"unknown prof action {action!r}")
 
     # -- self-healing control (SCRUB verb) -------------------------------
 
@@ -533,6 +567,10 @@ class BasketServer:
     # -- vectored reads --------------------------------------------------
 
     def _readv(self, body: dict) -> tuple[dict, bytes]:
+        with obs.profile.mem_phase("server.readv"):
+            return self._readv_inner(body)
+
+    def _readv_inner(self, body: dict) -> tuple[dict, bytes]:
         rel = body["path"]
         cat = self._catalog(rel)
         gen = body.get("generation")

@@ -98,7 +98,8 @@ class ServeEngine:
         for slot_i, (rid, t, max_new) in zip(free, take):
             toks[slot_i, plen - len(t):] = t
         with obs.trace.span("serve.prefill", cat="serve", slots=len(take),
-                            plen=plen):
+                            plen=plen), \
+                obs.profile.mem_phase("serve.prefill"):
             logits, cache = self._prefill(self.params,
                                           {"tokens": jnp.asarray(toks)})
         # write the prefilled rows into the engine cache
@@ -130,7 +131,8 @@ class ServeEngine:
             for i in active:
                 last[i, 0] = self.slots[i].out[-1]
             with obs.trace.span("serve.decode_step", cat="serve",
-                                slots=len(active)):
+                                slots=len(active)), \
+                    obs.profile.mem_phase("serve.decode_step"):
                 logits, self.cache = self._decode(
                     self.params, self.cache, jnp.asarray(last),
                     jnp.asarray(pos, jnp.int32))

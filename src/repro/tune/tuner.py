@@ -397,7 +397,8 @@ class Tuner:
         from repro.io.engine import _trial_task
         cands = self.candidates if self.candidates is not None \
             else default_candidates(arr, self.objective)
-        trials = self._run_trials(sample, cands)
+        with obs.profile.mem_phase("tune.matrix"):
+            trials = self._run_trials(sample, cands)
         # fairness pass: a budget-cut candidate was measured on a probe,
         # and ratio (and fixed-overhead-diluted MB/s) at probe size is not
         # comparable to full-sample numbers — so before the final pick,

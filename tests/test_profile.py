@@ -1,0 +1,538 @@
+"""repro.obs v3: sampling profiler, memory watermarks, flight recorder.
+
+What's pinned here (DESIGN.md §17):
+
+* the wall-clock sampler attributes a synthetic hot function to its
+  enclosing span (``span:<name>`` fold prefix + trace-id table);
+* collapsed-stack and speedscope exports are well-formed (frame indices
+  in range, weights sum to the sample total);
+* ``drain``/``ingest`` fold counts exactly and take the max of
+  watermark peaks — the process-pool / PROF-fetch transport;
+* ``mem_phase`` records RSS and tracemalloc peaks when armed and is a
+  shared no-op otherwise;
+* ``set_enabled(False)`` fully disables the stack: ``start()`` refuses,
+  a running sampler skips its ticks, ``mem_phase`` is null, the flight
+  ticker records nothing;
+* concurrent ``trace.drain()`` vs ``trace.ingest()`` neither loses nor
+  duplicates events (the worker-folding race, satellite of §16);
+* process-pool workers' samples fold back through ``collect_obs()``;
+* the flight recorder dumps once per death, chains the previous
+  excepthook (exit status preserved), survives SIGTERM with the default
+  disposition, and its bundle renders via ``obstat --postmortem``;
+* the RBSP PROF verb round-trips start/status/fetch/stop against a live
+  server, and ``STATS profile=true`` carries the watch-section summary;
+* tools/benchdiff.py --json emits per-series verdicts; tools/heatmap.py
+  merges multi-replica targets.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import flight as F
+from repro.obs import metrics as M
+from repro.obs import profile as P
+from repro.obs import trace as T
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+REPO = os.path.dirname(SRC)
+
+
+def _spin_for(seconds: float) -> int:
+    acc = 1
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < seconds:
+        for _ in range(10_000):
+            acc = (acc * 1103515245 + 12345) & 0xFFFFFFFF
+    return acc
+
+
+@pytest.fixture(autouse=True)
+def _clean_profiler():
+    """Every test starts and ends with the profiler stopped and empty —
+    module state is process-global and must not leak across tests."""
+    P.stop()
+    P.reset()
+    yield
+    P.stop()
+    P.reset()
+    M.set_enabled(True)
+
+
+# ---------------------------------------------------------------------------
+# the sampler: hot-function plurality + span attribution
+# ---------------------------------------------------------------------------
+
+def test_sampler_attributes_hot_function_to_span():
+    assert P.start(hz=250) is True
+    try:
+        with T.span("t.hot", root=True):
+            _spin_for(0.4)
+    finally:
+        P.stop()
+    doc = P.drain()
+    assert doc["samples"] >= 5
+    # judge plurality among the span-attributed folds only: the full test
+    # suite leaves idle daemon threads (servers, flushers) whose blocked
+    # frames are legitimately sampled too — a wall-clock profiler sees
+    # every thread, but only this test's thread runs under t.hot
+    hot = {k: v for k, v in doc["folds"].items()
+           if k.startswith("span:t.hot;")}
+    assert hot, "no sample attributed to span:t.hot"
+    self_c = P.self_counts({"folds": hot})
+    top = max(self_c, key=self_c.get)
+    assert "_spin_for" in top, f"hot function not top self frame: {top}"
+    # ...and the span's minted trace id landed in the attribution table
+    assert len(doc["span_traces"].get("t.hot", "")) == 32
+
+
+def test_profiler_restart_and_status():
+    assert P.start(hz=11) is True
+    st = P.status()
+    assert st["active"] and st["hz"] == 11 and st["mem"] is None
+    assert P.start(hz=23) is True         # restart with new settings
+    assert P.status()["hz"] == 23
+    P.stop()
+    st = P.status()
+    assert not st["active"] and st["hz"] == 0.0 and not P.active()
+
+
+def test_span_push_pop_balanced_even_when_started_mid_span():
+    """A profiler started inside an open span must not pop what was never
+    pushed — the _prof flag is latched at span entry."""
+    tid = threading.get_ident()
+    with T.span("t.outer"):
+        P.start(hz=5)
+        with T.span("t.inner"):
+            assert [n for n, _ in P._span_stacks.get(tid, [])] == ["t.inner"]
+        P.stop()
+    assert P._span_stacks.get(tid, []) == []
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_collapsed_and_speedscope_shapes():
+    doc = {"folds": {"a;b": 3, "a;c": 1, "span:x;a;b": 2}, "samples": 6}
+    assert P.collapsed(doc) == "a;b 3\na;c 1\nspan:x;a;b 2\n"
+    ss = P.speedscope(doc, name="t")
+    assert ss["$schema"].endswith("file-format-schema.json")
+    (prof,) = ss["profiles"]
+    assert prof["type"] == "sampled" and prof["endValue"] == 6
+    assert sum(prof["weights"]) == 6
+    nframes = len(ss["shared"]["frames"])
+    assert all(0 <= ix < nframes for s in prof["samples"] for ix in s)
+    # stacks decode back to the folds
+    names = [f["name"] for f in ss["shared"]["frames"]]
+    decoded = {";".join(names[ix] for ix in s): w
+               for s, w in zip(prof["samples"], prof["weights"])}
+    assert decoded == doc["folds"]
+
+
+def test_self_counts_aggregates_leaf_frames():
+    doc = {"folds": {"a;leaf": 3, "b;x;leaf": 2, "c;other": 1}}
+    assert P.self_counts(doc) == {"leaf": 5, "other": 1}
+
+
+# ---------------------------------------------------------------------------
+# drain/ingest: the pool / PROF transport
+# ---------------------------------------------------------------------------
+
+def test_drain_ingest_folds_counts_and_maxes_watermarks():
+    a = {"folds": {"x;y": 3, "z": 1}, "samples": 4,
+         "span_traces": {"s1": "ab" * 16},
+         "watermarks": {"p": {"peak_bytes": 100, "count": 2, "src": "rss"}}}
+    b = {"folds": {"x;y": 2}, "samples": 2,
+         "watermarks": {"p": {"peak_bytes": 50, "count": 1, "src": "rss"}}}
+    assert P.ingest(a) == 4
+    assert P.ingest(b) == 2
+    doc = P.snapshot()
+    assert doc["samples"] == 6
+    assert doc["folds"] == {"x;y": 5, "z": 1}
+    assert doc["span_traces"]["s1"] == "ab" * 16
+    w = doc["watermarks"]["p"]
+    assert w["peak_bytes"] == 100 and w["count"] == 3   # max peak, sum count
+    # junk is rejected without corrupting state
+    assert P.ingest(None) == 0
+    assert P.ingest("junk") == 0
+    assert P.ingest({"folds": {"k": "bad", 3: 1}}) == 0
+    assert P.snapshot()["samples"] == 6
+    # drain empties: a sample crosses the boundary exactly once
+    assert P.drain()["samples"] == 6
+    assert P.snapshot() == {"version": 1, "samples": 0, "folds": {},
+                            "span_traces": {}, "watermarks": {},
+                            "active": False}
+
+
+# ---------------------------------------------------------------------------
+# memory watermarks
+# ---------------------------------------------------------------------------
+
+def test_mem_phase_null_unless_armed():
+    assert P.mem_phase("t.p") is P._NULL_PHASE
+    with P.mem_phase("t.p"):
+        pass
+    assert P.watermarks() == {}
+
+
+def test_mem_phase_rss_records_peak_and_histogram():
+    assert P.start(hz=1, mem=True) is True             # True == "rss"
+    try:
+        with P.mem_phase("t.rss"):
+            arr = np.ones(4 << 20, dtype=np.uint8)     # 4 MB touched
+            arr[::4096] = 2
+    finally:
+        P.stop()
+    w = P.watermarks()["t.rss"]
+    assert w["src"] == "rss" and w["count"] == 1
+    assert w["peak_bytes"] > 1 << 20                   # absolute RSS: > 1 MB
+    hists = obs.snapshot()["hists"]
+    key = M.format_key("mem.phase_peak_bytes", {"phase": "t.rss"})
+    assert hists[key]["count"] >= 1
+    # disarmed again after stop()
+    assert P.mem_phase("t.rss") is P._NULL_PHASE
+
+
+def test_mem_phase_tracemalloc_sees_python_heap():
+    import tracemalloc
+    assert P.start(hz=1, mem="tracemalloc") is True
+    try:
+        assert tracemalloc.is_tracing()
+        with P.mem_phase("t.tm"):
+            blob = bytearray(8 << 20)                  # 8 MB python alloc
+            blob[0] = 1
+        del blob
+    finally:
+        P.stop()
+    assert not tracemalloc.is_tracing()                # stop() tore it down
+    w = P.watermarks()["t.tm"]
+    assert w["src"] == "tracemalloc"
+    assert w["peak_bytes"] >= 8 << 20
+
+
+# ---------------------------------------------------------------------------
+# the REPRO_OBS gate disables everything (satellite)
+# ---------------------------------------------------------------------------
+
+def test_disabled_gate_stops_sampler_memphase_and_flight():
+    assert P.start(hz=200) is True
+    M.set_enabled(False)
+    try:
+        time.sleep(0.05)                               # let in-flight tick end
+        s0 = P.status()["samples"]
+        _spin_for(0.2)
+        assert P.status()["samples"] == s0             # sampler skips ticks
+        assert P.start(hz=100) is False                # refuses to (re)start
+        assert P.mem_phase("t.off") is P._NULL_PHASE
+        rec = F.FlightRecorder()
+        rec.tick()
+        assert list(rec._ring) == []                   # ticker records nothing
+    finally:
+        M.set_enabled(True)
+        P.stop()
+
+
+# ---------------------------------------------------------------------------
+# concurrent trace drain vs ingest (satellite): no loss, no duplication
+# ---------------------------------------------------------------------------
+
+def test_concurrent_trace_drain_vs_ingest_exact():
+    T.clear()
+    N_THREADS, N_EVENTS = 4, 4000                      # < ring capacity: no
+    collected: list = []                               # eviction even if the
+    stop = threading.Event()                           # drainer stalls
+
+    def producer(i):
+        for j in range(N_EVENTS):
+            T.ingest([{"name": f"p{i}.{j}", "ph": "X", "ts": 1.0}])
+
+    def drainer():
+        while not stop.is_set():
+            collected.extend(T.drain())
+
+    threads = [threading.Thread(target=producer, args=(i,))
+               for i in range(N_THREADS)]
+    d = threading.Thread(target=drainer)
+    d.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    d.join()
+    collected.extend(T.drain())                        # the final delta
+    names = [e["name"] for e in collected]
+    assert len(names) == N_THREADS * N_EVENTS
+    assert len(set(names)) == N_THREADS * N_EVENTS
+    assert T.events() == []
+
+
+# ---------------------------------------------------------------------------
+# process-pool worker samples fold back
+# ---------------------------------------------------------------------------
+
+def test_worker_profile_folds_back_through_collect_obs():
+    from repro.core.codec import CompressionConfig
+    from repro.io.engine import CompressionEngine
+
+    # repro-deflate is pure python: routed to the *process* pool, and
+    # slow enough (~1s/MB) that a 500 Hz sampler cannot miss it
+    raw = np.arange(131_072, dtype=np.int64).tobytes()
+    with CompressionEngine(workers=1, shm=False) as eng:
+        eng.profile_workers("start", hz=500)
+        with T.span("test.root", root=True):       # tp rides into the task
+            out = list(eng.pack_stream([(0, len(raw), raw)],
+                                       CompressionConfig("repro-deflate", 1)))
+        assert len(out) == 1
+        eng.profile_workers("stop")
+        eng.collect_obs()
+    doc = P.snapshot()
+    assert doc["samples"] > 0, "no worker samples folded back"
+    assert any(k.startswith("span:engine.pack") for k in doc["folds"]), \
+        "worker samples not attributed to span:engine.pack"
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+def test_flight_trigger_writes_loadable_bundle(tmp_path):
+    obs.counter("t.flight").inc(3)
+    T.clear()
+    with T.span("t.flight_span", root=True):
+        pass
+    out = str(tmp_path / "bundle.json")
+    got = F.trigger("unit-test", path=out)
+    assert got == out
+    doc = F.load_bundle(out)
+    assert doc["kind"] == F.BUNDLE_KIND and doc["reason"] == "unit-test"
+    assert doc["final_metrics"]["counters"]["t.flight"] >= 3
+    assert any(e.get("name") == "t.flight_span"
+               for e in doc["trace_events"])
+    assert any(t.get("name") == "MainThread" for t in doc["threads"])
+    # non-bundle json is rejected
+    bad = str(tmp_path / "bad.json")
+    with open(bad, "w") as f:
+        json.dump({"kind": "other"}, f)
+    with pytest.raises(ValueError):
+        F.load_bundle(bad)
+
+
+def test_flight_install_idempotent_and_uninstall_restores_hook(tmp_path):
+    prev_hook = sys.excepthook
+    try:
+        rec = F.install(dir=str(tmp_path), ticker=False)
+        assert F.install() is rec                      # idempotent singleton
+        assert F.recorder() is rec
+        assert sys.excepthook is not prev_hook
+    finally:
+        F.uninstall()
+    assert sys.excepthook is prev_hook
+    assert F.recorder() is None
+
+
+def test_flight_dumps_once_per_death(tmp_path):
+    rec = F.FlightRecorder(dir=str(tmp_path))
+    rec.tick()
+    assert rec.dump("crash-a") is not None
+    assert rec.dump("crash-b") is None                 # second death: no dump
+    assert rec.dump("manual", force=True) is not None  # trigger always dumps
+    assert len(list(tmp_path.glob("flight-*.json"))) == 2
+
+
+def test_flight_excepthook_dumps_and_preserves_exit(tmp_path):
+    script = (
+        "import sys\n"
+        f"sys.path.insert(0, {SRC!r})\n"
+        "from repro import obs\n"
+        f"obs.flight.install(dir={str(tmp_path)!r}, interval_s=0.05)\n"
+        "obs.counter('t.crash').inc()\n"
+        "raise KeyError('boom')\n")
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 1                           # previous hook still ran
+    assert "KeyError" in r.stderr and "boom" in r.stderr
+    (bundle,) = tmp_path.glob("flight-*.json")
+    doc = F.load_bundle(str(bundle))
+    assert doc["reason"] == "unhandled-exception"
+    assert doc["exception"]["type"] == "KeyError"
+    assert doc["final_metrics"]["counters"]["t.crash"] == 1
+
+
+def test_flight_sigterm_dumps_and_redelivers(tmp_path):
+    script = (
+        "import sys, time\n"
+        f"sys.path.insert(0, {SRC!r})\n"
+        "from repro import obs\n"
+        f"obs.flight.install(dir={str(tmp_path)!r}, interval_s=0.05)\n"
+        "print('armed', flush=True)\n"
+        "time.sleep(30)\n")
+    proc = subprocess.Popen([sys.executable, "-c", script],
+                            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                            text=True)
+    try:
+        assert proc.stdout.readline().strip() == "armed"
+        time.sleep(0.2)                                # a tick or two
+        proc.send_signal(signal.SIGTERM)
+        proc.wait(timeout=30)
+    finally:
+        proc.kill()
+    assert proc.returncode == -signal.SIGTERM          # default disposition
+    (bundle,) = tmp_path.glob("flight-*.json")
+    assert F.load_bundle(str(bundle))["reason"] == "sigterm"
+
+
+def test_obstat_postmortem_renders_bundle(tmp_path, capsys):
+    from repro.obs.__main__ import main as obstat_main
+    obs.counter("t.pm").inc()
+    out = str(tmp_path / "pm.json")
+    assert F.trigger("render-test", path=out) == out
+    assert obstat_main(["--postmortem", out]) == 0
+    text = capsys.readouterr().out
+    assert "render-test" in text and "MainThread" in text
+    assert obstat_main(["--postmortem", out, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["kind"] == F.BUNDLE_KIND
+
+
+# ---------------------------------------------------------------------------
+# RBSP PROF verb + STATS profile section
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def served_dir(tmp_path):
+    from repro.core.bfile import write_arrays
+    from repro.core.codec import CompressionConfig
+    rng = np.random.default_rng(13)
+    write_arrays(str(tmp_path / "ev.bskt"),
+                 {"e": rng.integers(0, 99, 400_000).astype(np.int64)},
+                 cfg_for=lambda n, a: CompressionConfig("zlib", 1, "delta8"),
+                 target_basket_bytes=32 * 1024)
+    return str(tmp_path)
+
+
+def test_prof_verb_roundtrip_against_live_server(served_dir):
+    from repro.remote import BasketServer, RemoteBasketFile
+    from repro.remote.client import fetch_stats, request_prof
+    with BasketServer(served_dir, workers=2, heat=False) as srv:
+        srv.start()
+        r = request_prof(srv.host, srv.port, action="start", hz=150,
+                         mem=True)
+        assert r["started"] is True and r["profile"]["active"]
+        assert r["profile"]["hz"] == 150 and r["profile"]["mem"] == "rss"
+        with RemoteBasketFile(srv.url("ev.bskt"), wire=None) as rf:
+            nb = len(rf.branches["e"]["baskets"])
+            t0 = time.perf_counter()
+            while time.perf_counter() - t0 < 0.3:
+                rf.fetch_wire("e", list(range(nb)))
+        st = fetch_stats(srv.host, srv.port, profile=True)
+        assert st["profile"]["active"] and "self" in st["profile"]
+        doc = request_prof(srv.host, srv.port, action="fetch",
+                           reset=True)["profile"]
+        assert doc["samples"] > 0 and doc["folds"]
+        assert "server.readv" in doc["watermarks"]     # READV under mem_phase
+        # reset=True drained: a second fetch covers a disjoint window
+        assert request_prof(srv.host, srv.port,
+                            action="fetch")["profile"]["samples"] \
+            <= doc["samples"]
+        r = request_prof(srv.host, srv.port, action="stop")
+        assert r["stopped"] is True and not r["profile"]["active"]
+
+
+# ---------------------------------------------------------------------------
+# benchdiff --json per-series verdicts (satellite)
+# ---------------------------------------------------------------------------
+
+BENCHDIFF = os.path.join(REPO, "tools", "benchdiff.py")
+
+
+def _write_bench(d, pr, value, unit="MB/s"):
+    doc = {"schema": 1, "benches": {"b": [
+        {"bench": "b", "stage": "s", "case": "c",
+         "value": value, "unit": unit, "wall_s": ""}]}}
+    with open(os.path.join(d, f"BENCH_pr{pr}.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def _benchdiff_json(d):
+    r = subprocess.run([sys.executable, BENCHDIFF, "--dir", d, "--json"],
+                       capture_output=True, text=True)
+    return r.returncode, json.loads(r.stdout)
+
+
+def test_benchdiff_json_emits_per_series_verdicts(tmp_path):
+    d = str(tmp_path)
+    _write_bench(d, 1, 1000.0)
+    _write_bench(d, 2, 980.0)
+    _write_bench(d, 3, 400.0)                          # -60% throughput
+    rc, doc = _benchdiff_json(d)
+    assert rc == 1
+    assert doc["compared"] == 1                        # backcompat: a count
+    (s,) = doc["series"]
+    assert s["series"] == "b/s/c" and s["unit"] == "MB/s"
+    assert s["verdict"] == "regressed" and s["direction"] == "higher"
+    assert s["delta"] < -0.4 and 0 < s["band"] < 1
+    assert doc["regressions"][0]["series"] == "b/s/c"
+    # within the band: verdict ok, exit 0
+    _write_bench(d, 3, 950.0)
+    rc, doc = _benchdiff_json(d)
+    assert rc == 0 and doc["series"][0]["verdict"] == "ok"
+    # better than every baseline beyond the band: improved, still exit 0
+    _write_bench(d, 3, 2000.0)
+    rc, doc = _benchdiff_json(d)
+    assert rc == 0 and doc["series"][0]["verdict"] == "improved"
+    assert doc["improvements"][0]["delta"] > 0.25
+
+
+# ---------------------------------------------------------------------------
+# heatmap multi-replica merge (satellite)
+# ---------------------------------------------------------------------------
+
+HEATMAP = os.path.join(REPO, "tools", "heatmap.py")
+
+
+def _make_replica(root, name, reads_hot):
+    from repro.obs import heat as H
+    os.makedirs(root, exist_ok=True)
+    hl = H.HeatLog(halflife_s=3600.0)
+    p = os.path.join(root, name)
+    for _ in range(reads_hot):
+        hl.record(p, "hot", [0], 1024)
+    hl.record(p, "cold", [1], 64)
+    hl.flush()
+
+
+def test_heatmap_merges_replicas_and_expands_globs(tmp_path):
+    _make_replica(str(tmp_path / "repA"), "ev.bskt", 30)
+    _make_replica(str(tmp_path / "repB"), "ev.bskt", 10)
+
+    def rows(*targets):
+        r = subprocess.run([sys.executable, HEATMAP, *targets, "--json"],
+                           cwd=str(tmp_path), capture_output=True, text=True)
+        assert r.returncode == 0, r.stderr
+        return json.loads(r.stdout)["rows"]
+
+    single = rows("repA")
+    assert single[0]["branch"] == "hot" and single[0]["reads"] == 30
+    merged = rows("repA", "repB")
+    by_branch = {r["branch"]: r for r in merged}
+    assert by_branch["hot"]["reads"] == 40             # replica sum
+    assert by_branch["cold"]["reads"] == 2
+    assert by_branch["hot"]["heat"] > by_branch["cold"]["heat"]
+    globbed = rows("rep*")                             # glob expansion
+    assert [(r["branch"], r["reads"]) for r in globbed] \
+        == [(r["branch"], r["reads"]) for r in merged]
+    for g, m in zip(globbed, merged):                  # heat decays to "now":
+        assert g["heat"] == pytest.approx(m["heat"], rel=1e-3)

@@ -24,6 +24,12 @@ comparable yet), 1 = regression beyond the band, 2 = usage error.
     tools/benchdiff.py                          # whole committed series
     tools/benchdiff.py --dir /tmp/bench --last 2 --band 0.5
     tools/benchdiff.py --json                   # machine-readable report
+
+``--json`` emits every comparable series (``"series"``) with a
+``verdict`` (ok / regressed / improved), its noise ``band``, direction,
+baselines, and delta vs the worst baseline — so a CI step can annotate
+per-series outcomes instead of only reading the exit code.  Exit codes
+are identical in both modes.
 """
 import argparse
 import glob
@@ -112,25 +118,31 @@ def judge(series: dict, prs: list, last: int, band_override=None):
         rep = {"series": f"{bench}/{stage}/{case}",
                "unit": unit, "value": value,
                "baselines": baselines, "band": band,
-               "vs_prs": base_prs, "pr": newest}
+               "vs_prs": base_prs, "pr": newest,
+               "direction": "lower" if lower_better else "higher",
+               "verdict": "ok"}
         compared.append(rep)
         if lower_better:
             worst = max(baselines)
             best = min(baselines)
+            rep["delta"] = value / worst - 1.0
             if value > worst * (1.0 + band):
-                rep["delta"] = value / worst - 1.0
+                rep["verdict"] = "regressed"
                 regressions.append(rep)
             elif value < best * (1.0 - band):
                 rep["delta"] = value / best - 1.0
+                rep["verdict"] = "improved"
                 improvements.append(rep)
         else:
             worst = min(baselines)
             best = max(baselines)
+            rep["delta"] = value / worst - 1.0
             if value < worst * (1.0 - band):
-                rep["delta"] = value / worst - 1.0
+                rep["verdict"] = "regressed"
                 regressions.append(rep)
             elif value > best * (1.0 + band):
                 rep["delta"] = value / best - 1.0
+                rep["verdict"] = "improved"
                 improvements.append(rep)
     return regressions, improvements, compared
 
@@ -160,7 +172,12 @@ def main(argv=None) -> int:
     regressions, improvements, compared = judge(series, prs, args.last,
                                                 args.band)
     if args.json:
+        # the CI annotator's input: every comparable series with its
+        # verdict, noise band, direction, and delta vs the worst baseline
+        # — not only the failures.  "compared" stays a count (the shape
+        # older scripts consumed); the per-series list is "series".
         json.dump({"prs": prs, "compared": len(compared),
+                   "series": compared,
                    "regressions": regressions,
                    "improvements": improvements}, sys.stdout, sort_keys=True)
         print()

@@ -11,11 +11,20 @@ consumes (DESIGN.md §16)::
     tools/heatmap.py HOST:PORT              # live server (STATS heat=true)
     tools/heatmap.py DIR --top 5 --baskets  # per-basket detail
     tools/heatmap.py DIR --json             # machine-readable
+    tools/heatmap.py replicaA/ replicaB/    # multi-replica merged view
+    tools/heatmap.py 'shard*/  *.heat'      # globs expand too
 
 Ranking is by decayed EWMA heat (recency-weighted), with cumulative
 reads as tiebreak — "hot now" first, "popular ever" second.
+
+With several targets (directories, sidecar files, globs, live servers —
+mixable), same-named containers across replicas fold into ONE row: each
+replica's heat is decayed to now first, then heat/reads/bytes/basket
+counts sum — the fleet-wide hottest-first view a multi-replica repacker
+wants.  A single target ranks exactly as before.
 """
 import argparse
+import glob as _glob
 import json
 import os
 import sys
@@ -66,6 +75,54 @@ def _collect_live(target: str) -> dict[str, dict]:
     return docs
 
 
+def _collect_target(target: str) -> dict[str, dict]:
+    """Sidecar docs from one target: live HOST:PORT, file, or directory."""
+    host, _, port = target.rpartition(":")
+    if host and port.isdigit() and not os.path.exists(target):
+        return _collect_live(target)
+    return _collect_sidecars(target)
+
+
+def merge_docs(per_target: list[dict[str, dict]]) -> dict[str, dict]:
+    """Fold several targets' docs into one map; same-named containers
+    (by basename — replicas hold copies under different roots) merge into
+    a single doc whose branch heat is decayed to now *before* summing, so
+    a replica flushed an hour ago doesn't outweigh one flushed a second
+    ago.  Merged docs carry ``t: None`` (already decayed) and a
+    ``replicas`` count; a single target passes through untouched."""
+    if len(per_target) <= 1:
+        return per_target[0] if per_target else {}
+    import time as _time
+    now = _time.time()
+    out: dict[str, dict] = {}
+    seen_from: dict[str, set] = {}
+    for ti, docs in enumerate(per_target):
+        for path, doc in docs.items():
+            key = os.path.basename(path)
+            hl = float(doc.get("halflife_s") or 3600.0)
+            m = out.get(key)
+            if m is None:
+                m = out[key] = {"version": 1, "halflife_s": hl,
+                                "branches": {}, "replicas": 0}
+                seen_from[key] = set()
+            seen_from[key].add(ti)
+            m["replicas"] = len(seen_from[key])
+            for br, rec in (doc.get("branches") or {}).items():
+                t = rec.get("t")
+                heat = float(rec.get("heat", 0.0))
+                if t is not None:       # sidecar heat: decay to now first
+                    heat = H._decay(heat, now - float(t), hl)
+                dst = m["branches"].setdefault(
+                    br, {"reads": 0, "bytes": 0, "heat": 0.0, "t": None,
+                         "baskets": {}})
+                dst["reads"] += int(rec.get("reads", 0))
+                dst["bytes"] += int(rec.get("bytes", 0))
+                dst["heat"] += heat
+                for bk, n in (rec.get("baskets") or {}).items():
+                    dst["baskets"][bk] = dst["baskets"].get(bk, 0) + int(n)
+    return out
+
+
 def rank_all(docs: dict[str, dict]) -> list[dict]:
     """Flatten to ``[{container, branch, heat, reads, bytes}, ...]``,
     hottest first across every container."""
@@ -91,9 +148,11 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="tools/heatmap.py",
         description="rank branches by persistent access heat")
-    ap.add_argument("target",
-                    help="directory of .heat sidecars, one sidecar file, "
-                         "or HOST:PORT of a live server")
+    ap.add_argument("targets", nargs="+", metavar="TARGET",
+                    help="directories of .heat sidecars, sidecar files, "
+                         "globs thereof, or HOST:PORT of live servers; "
+                         "several targets merge into one replica-summed "
+                         "ranking")
     ap.add_argument("--top", type=int, default=20, metavar="N",
                     help="rows shown (default 20)")
     ap.add_argument("--baskets", action="store_true",
@@ -102,11 +161,15 @@ def main(argv=None) -> int:
                     help="machine-readable output (the repacker input)")
     args = ap.parse_args(argv)
 
-    host, _, port = args.target.rpartition(":")
-    if host and port.isdigit() and not os.path.exists(args.target):
-        docs = _collect_live(args.target)
-    else:
-        docs = _collect_sidecars(args.target)
+    # expand globs (quoted on the command line, or host shells that don't
+    # expand); a pattern matching nothing falls through as a literal so
+    # the "no heat telemetry found" path still reports it
+    targets: list[str] = []
+    for t in args.targets:
+        hits = sorted(_glob.glob(t)) if any(c in t for c in "*?[") else []
+        targets.extend(hits or [t])
+    per_target = [_collect_target(t) for t in targets]
+    docs = merge_docs(per_target)
     rows = rank_all(docs)
 
     if args.json:

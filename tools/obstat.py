@@ -4,7 +4,11 @@ works from a source checkout without PYTHONPATH gymnastics::
 
     tools/obstat.py HOST:PORT                      # one-shot dump
     tools/obstat.py HOST:PORT --watch --top 10     # hot branches + latency
+                                                   #   + profiler section
     tools/obstat.py HOST:PORT --trace out.json     # Chrome trace window
+    tools/obstat.py HOST:PORT --prof capture \\
+                    --prof-out flame.folded        # live flamegraph (PROF)
+    tools/obstat.py --postmortem flight-123.json   # crash bundle viewer
 """
 import os
 import sys
